@@ -1,0 +1,247 @@
+"""Benchmark harness — one function per paper table + the scale benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Paper anchors:
+
+* Table 1 — single-processor worker scaling (Mandelbrot, 1..W workers);
+* Table 2 — cluster scaling (nodes x 4 workers, demand-driven);
+* Table 3 — multicore-vs-cluster comparison at equal worker cores;
+* section 8.2 — application load time, linear in node count;
+* roofline — reads ``results/roofline`` (produced by launch.roofline).
+
+The container is one CPU host, so "nodes" are thread groups exactly as the
+paper's single-host confidence-building mode (section 6.1); XLA releases
+the GIL during the Mandelbrot tile computation so workers overlap.
+Absolute times differ from the paper's i7/i9 cluster; the *scaling
+behaviour* (speedup, efficiency, demand-driven balance, load-time
+linearity) is the reproduced object.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.builder import ClusterBuilder
+from repro.core.dsl import ClusterSpec
+from repro.core.processes import EmitDetails, ResultDetails
+from repro.kernels.mandelbrot.ops import mandelbrot
+from repro.kernels.mandelbrot.ref import line_coords
+
+# Scaled-down Mandelbrot instance (paper: 3200 lines x 5600 points, esc 1000).
+LINES = 120
+WIDTH = 1400
+MAX_ITERS = 300
+LINES_PER_ITEM = 4  # one work object = a band of lines (paper: 1 line)
+
+
+def _mandelbrot_spec(nclusters: int, workers: int) -> ClusterSpec:
+    def init(n_items):
+        return (0, n_items)
+
+    def create(state):
+        i, n = state
+        if i >= n:
+            return None, state
+        return i, (i + 1, n)
+
+    def work(item: int):
+        y0 = item * LINES_PER_ITEM
+        xs, ys = [], []
+        for dy in range(LINES_PER_ITEM):
+            x, y = line_coords(WIDTH, y0 + dy)
+            xs.append(x)
+            ys.append(y)
+        x0 = jnp.stack(xs)
+        y0g = jnp.stack(ys)
+        iters, colour = mandelbrot(x0, y0g, max_iters=MAX_ITERS)
+        return (int(jnp.sum(iters)), int(jnp.sum(colour)), colour.size)
+
+    def collect(acc, item):
+        t, w, p = item
+        return (acc[0] + t, acc[1] + w, acc[2] + p)
+
+    return ClusterSpec.simple(
+        host="127.0.0.1",
+        nclusters=nclusters,
+        workers_per_node=workers,
+        emit_details=EmitDetails(
+            name="Mdata", init=init, init_data=(LINES // LINES_PER_ITEM,),
+            create=create,
+        ),
+        work_function=work,
+        result_details=ResultDetails(
+            name="Mcollect", init=lambda: (0, 0, 0), collect=collect,
+        ),
+    )
+
+
+def _run_spec(nclusters: int, workers: int):
+    builder = ClusterBuilder()
+    app = builder.build_application(_mandelbrot_spec(nclusters, workers))
+    t0 = time.perf_counter()
+    result = app.run()
+    dt = time.perf_counter() - t0
+    return dt, result, builder.timing
+
+
+def _warm() -> None:
+    # compile the kernel once so Table rows measure compute, not tracing
+    x, y = line_coords(WIDTH, 0)
+    x0 = jnp.stack([x] * LINES_PER_ITEM)
+    y0 = jnp.stack([y] * LINES_PER_ITEM)
+    jax.block_until_ready(mandelbrot(x0, y0, max_iters=MAX_ITERS))
+
+
+def table1_worker_scaling() -> list[str]:
+    """Paper Table 1: 1 node, varying worker count."""
+    rows = []
+    base = None
+    for w in (1, 2, 4, 8):
+        dt, result, _ = _run_spec(1, w)
+        base = base or dt
+        speedup = base / dt
+        eff = speedup / w
+        rows.append(
+            f"table1_workers_{w},{dt * 1e6:.0f},"
+            f"speedup={speedup:.2f};efficiency={100 * eff:.1f}%"
+            f";points={result[2]}"
+        )
+    return rows
+
+
+def table2_cluster_scaling() -> list[str]:
+    """Paper Table 2: nodes x 4 workers, demand-driven distribution."""
+    rows = []
+    base = None
+    for nodes in (1, 2, 3):
+        dt, _result, timing = _run_spec(nodes, 4)
+        base = base or dt
+        speedup = base / dt
+        eff = speedup / nodes
+        items = {t.node_id: t.items for t in timing.nodes
+                 if t.node_id.startswith("node")}
+        rows.append(
+            f"table2_nodes_{nodes},{dt * 1e6:.0f},"
+            f"speedup={speedup:.2f};efficiency={100 * eff:.1f}%"
+            f";items={'/'.join(str(items[k]) for k in sorted(items))}"
+        )
+    return rows
+
+
+def table3_multicore_vs_cluster() -> list[str]:
+    """Paper Table 3: same worker-core count, one node vs many nodes."""
+    rows = []
+    for cores in (4, 8):
+        dt_multi, _r1, _ = _run_spec(1, cores)  # "multicore": 1 node
+        dt_cluster, _r2, _ = _run_spec(cores // 4, 4)  # 4-core nodes
+        diff = (dt_cluster - dt_multi) / dt_cluster * 100
+        rows.append(
+            f"table3_cores_{cores},{dt_cluster * 1e6:.0f},"
+            f"multicore_us={dt_multi * 1e6:.0f};diff={diff:.1f}%"
+        )
+    return rows
+
+
+def load_time_linearity() -> list[str]:
+    """Paper section 8.2: load time linear in node count, small vs runtime."""
+    rows = []
+    for nodes in (1, 2, 4, 8):
+        builder = ClusterBuilder()
+        app = builder.build_application(_mandelbrot_spec(nodes, 1))
+        app.run()
+        load_ms = builder.timing.total_load_ms()
+        frac = builder.timing.load_fraction()
+        rows.append(
+            f"load_time_nodes_{nodes},{load_ms * 1e3:.0f},"
+            f"load_fraction={100 * frac:.2f}%"
+        )
+    return rows
+
+
+def verification_cost() -> list[str]:
+    """Formal verification wall time (FDR-analogue, paper section 7)."""
+    from repro.core.verify import verify_network
+
+    rows = []
+    for (n, w, m) in [(2, 1, 5), (2, 2, 4)]:
+        t0 = time.perf_counter()
+        rep = verify_network(n, w, m)
+        dt = time.perf_counter() - t0
+        rows.append(
+            f"verify_N{n}_W{w}_M{m},{dt * 1e6:.0f},"
+            f"states={rep.num_states};ok={rep.ok}"
+        )
+    return rows
+
+
+def kernel_microbench() -> list[str]:
+    """Per-kernel interpret-mode sanity timings vs jnp oracle."""
+    from repro.kernels.rmsnorm.ops import rms_norm
+    from repro.kernels.rmsnorm.ref import rms_norm_reference
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 1024), jnp.float32)
+    s = jnp.zeros((1024,))
+    rows = []
+    for name, fn in (
+        ("rmsnorm_pallas_interp", lambda: rms_norm(x, s)),
+        ("rmsnorm_jnp_ref", lambda: rms_norm_reference(x, s)),
+    ):
+        fn()  # warm
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        rows.append(f"{name},{(time.perf_counter() - t0) / 5 * 1e6:.0f},-")
+    return rows
+
+
+def roofline_summary() -> list[str]:
+    """Summarise results/roofline (if the sweep has been run)."""
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "roofline")
+    rows = []
+    if not os.path.isdir(out_dir):
+        return ["roofline,0,run `python -m repro.launch.roofline --all` first"]
+    for name in sorted(os.listdir(out_dir)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, name)) as fh:
+            r = json.load(fh)
+        if not r.get("ok"):
+            rows.append(f"roofline_{r['arch']}_{r['shape']},0,FAILED")
+            continue
+        bound = max(r["terms_seconds"].values())
+        rows.append(
+            f"roofline_{r['arch']}_{r['shape']},{bound * 1e6:.0f},"
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.3f}"
+        )
+    return rows
+
+
+def main() -> None:
+    _warm()
+    print("name,us_per_call,derived")
+    sections = [
+        table1_worker_scaling,
+        table2_cluster_scaling,
+        table3_multicore_vs_cluster,
+        load_time_linearity,
+        verification_cost,
+        kernel_microbench,
+        roofline_summary,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in sections:
+        if only and only not in fn.__name__:
+            continue
+        for row in fn():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Hillclimb measurement driver: compile a 1-period probe of a config
+variant and report (flops, bytes, collective link bytes) per device."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, json, sys, time
+import jax
+from repro.configs.registry import get_config, get_shape
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.core.builder import ClusterBuilder
+from repro.core.channels import ShardingRules, training_rules, _common_weight_rules
+
+def measure(arch, shape_name, variant_name, cfg_overrides=None, seq_sp=True, layers=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    p = len(cfg.layer_pattern)
+    cfg = dataclasses.replace(cfg, num_layers=layers or p, scan_layers=False,
+                              unroll_scans=True, **(cfg_overrides or {}))
+    mesh = make_production_mesh()
+    fn, args, donate, rules, tp = build_cell(cfg, shape, mesh)
+    if not seq_sp:
+        rules = ShardingRules(mesh, [
+            ("batch", ("pod", "data")), ("batch", ("data",)),
+            ("seq_sp", None), ("seq", None), ("d_model", None),
+        ] + _common_weight_rules())
+        fn, args, donate, _r, tp = build_cell(cfg, shape, mesh)
+        # rebuild with substituted rules
+        from repro.runtime import steps as steps_mod
+        from repro.optim.adamw import AdamWConfig
+        opt_cfg = AdamWConfig()
+        fn = steps_mod.make_train_step(cfg, opt_cfg, tp=tp, rules=rules)
+        pst, ost = steps_mod.train_state_structs(cfg, rules, tp, opt_cfg)
+        b = steps_mod.batch_structs(cfg, shape, rules)
+        import jax.numpy as jnp
+        args = (pst, ost, b, jax.ShapeDtypeStruct((), jnp.int32))
+    t0 = time.time()
+    art = ClusterBuilder(mesh=mesh, rules=rules).build_step(fn, args, donate_argnums=donate)
+    c = art.cost(); colls = art.collectives()
+    ma = art.memory()
+    live = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    print(f"{variant_name:<42} flops {c['flops_per_device']:.3e}  "
+          f"bytes {c['bytes_per_device']:.3e}  "
+          f"coll {colls.total_link_bytes/2**30:6.2f} GiB  "
+          f"mem {live/2**30:6.2f} GiB  ({time.time()-t0:.0f}s)", flush=True)
+    return c, colls
+
+if __name__ == "__main__":
+    for spec in json.loads(sys.argv[1]):
+        measure(**spec)

@@ -1,0 +1,262 @@
+"""Typed channels and automatic sharding derivation.
+
+Paper requirement 4: *"define and build application network interconnections
+with no user intervention"*.  In the JCSP original this meant constructing
+net-channel addresses (ip:port/channel) between processes.  In the SPMD
+adaptation the "interconnections" are XLA collectives, which are induced by
+the shardings of every tensor flowing between (virtual) nodes — so the
+builder's job becomes: derive a sound ``PartitionSpec`` for every tensor from
+*logical axis names* alone.  Users annotate tensors with names like
+``("batch", "seq", "d_model")``; they never write a ``PartitionSpec`` (the
+analogue of never writing a channel address).
+
+Derivation walks an ordered rule table (first applicable rule wins) with two
+soundness checks per dimension:
+
+* **divisibility** — the dimension size must divide evenly over the mesh axes
+  (no silent GSPMD padding; padded archs are handled explicitly upstream via
+  :func:`padded_size`);
+* **exclusivity** — a mesh axis may shard at most one dimension of a tensor.
+
+Fallback entries in the table make the derivation total: e.g. a KV cache with
+8 KV heads on a 16-way model axis falls through ``kv_heads -> model`` to
+``kv_seq -> model`` (FlashDecoding-style sequence sharding), which is exactly
+the re-wiring a human expert would do.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# A rule maps a logical axis name to a tuple of mesh axis names (applied
+# together, e.g. ("pod", "data") for global data parallelism) or to None
+# (replicate).  Rules earlier in the table take priority.
+Rule = tuple[str, tuple[str, ...] | None]
+
+
+@dataclass(frozen=True)
+class Channel:
+    """A typed channel: the unit the builder wires between stages.
+
+    Mirrors the paper's net channel (named, typed, single-reader); ``shape``
+    and ``dtype`` replace the serialised object class, ``logical_axes``
+    replaces the address — the builder resolves it to a physical placement.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+    logical_axes: tuple[str | None, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"channel {self.name!r}: shape {self.shape} and logical axes "
+                f"{self.logical_axes} have different ranks"
+            )
+
+
+class ShardingRules:
+    """Ordered logical-axis -> mesh-axes rule table bound to a mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Sequence[Rule]):
+        self.mesh = mesh
+        self.axis_sizes: dict[str, int] = dict(
+            zip(mesh.axis_names, np.shape(mesh.devices))
+        )
+        # Keep only mesh axes that exist (lets one table serve single- and
+        # multi-pod meshes: ("pod","data") degrades to ("data",) off-pod).
+        self.rules: list[Rule] = []
+        for name, axes in rules:
+            if axes is None:
+                self.rules.append((name, None))
+            else:
+                kept = tuple(a for a in axes if a in self.axis_sizes)
+                self.rules.append((name, kept if kept else None))
+
+    # -- core derivation -----------------------------------------------------
+
+    def partition_spec(
+        self,
+        shape: Sequence[int],
+        logical_axes: Sequence[str | None],
+    ) -> P:
+        if len(shape) != len(logical_axes):
+            raise ValueError(f"rank mismatch: {shape} vs {logical_axes}")
+        used: set[str] = set()
+        entries: list[Any] = []
+        for size, name in zip(shape, logical_axes):
+            entries.append(self._dim_axes(size, name, used))
+        # Trim trailing None entries (canonical PartitionSpec form).
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def _dim_axes(
+        self, size: int, name: str | None, used: set[str]
+    ) -> tuple[str, ...] | str | None:
+        if name is None:
+            return None
+        for rule_name, axes in self.rules:
+            if rule_name != name:
+                continue
+            if axes is None:
+                return None
+            if any(a in used for a in axes):
+                continue
+            prod = math.prod(self.axis_sizes[a] for a in axes)
+            if prod == 0 or size % prod != 0:
+                continue
+            used.update(axes)
+            return axes if len(axes) > 1 else axes[0]
+        return None  # no applicable rule: replicate (always sound)
+
+    def sharding(self, channel_or_shape, logical_axes=None) -> NamedSharding:
+        if isinstance(channel_or_shape, Channel):
+            spec = self.partition_spec(
+                channel_or_shape.shape, channel_or_shape.logical_axes
+            )
+        else:
+            spec = self.partition_spec(channel_or_shape, logical_axes)
+        return NamedSharding(self.mesh, spec)
+
+    def struct(self, channel: Channel) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct stand-in (dry-run input: no allocation)."""
+        return jax.ShapeDtypeStruct(
+            channel.shape, channel.dtype, sharding=self.sharding(channel)
+        )
+
+    def constraint(self, x, logical_axes: Sequence[str | None]):
+        """``with_sharding_constraint`` via logical names (models use this)."""
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(tuple(x.shape), tuple(logical_axes))
+        )
+
+    # -- diagnostics ----------------------------------------------------------
+
+    def describe(self, channels: Sequence[Channel]) -> str:
+        lines = [f"{'channel':<28}{'shape':<28}{'partition spec'}"]
+        for ch in channels:
+            spec = self.partition_spec(ch.shape, ch.logical_axes)
+            lines.append(f"{ch.name:<28}{str(ch.shape):<28}{spec}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Preset rule tables (one per execution shape-kind).
+# ---------------------------------------------------------------------------
+
+def _common_weight_rules() -> list[Rule]:
+    return [
+        # Tensor parallelism: feature/head/expert dims over the model axis.
+        ("vocab", ("model",)),
+        ("d_ff", ("model",)),
+        ("d_attn", ("model",)),  # flattened q heads * head_dim (projections)
+        ("d_kv_attn", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("experts", ("model",)),
+        ("rnn_state", ("model",)),
+        # FSDP (ZeRO-3): the non-TP dim of every weight over the data axes.
+        ("d_model_fsdp", ("pod", "data")),
+        ("d_model_fsdp", ("data",)),
+        ("layers", None),
+        ("head_dim", None),
+    ]
+
+
+def training_rules(mesh: Mesh) -> ShardingRules:
+    """train_4k / prefill_32k: batch over (pod, data), TP over model.
+
+    ``seq_sp`` is the *residual-stream* sequence axis (the tensor carried
+    between blocks and saved for backward): sharding it over the model axis
+    is Megatron-style sequence parallelism — XLA turns the block-boundary
+    all-reduce into reduce-scatter + all-gather (same bytes) while the saved
+    activations shrink by the TP degree.  Attention-internal ``seq`` stays
+    unsharded (full context per shard).
+    """
+    return ShardingRules(
+        mesh,
+        [
+            ("batch", ("pod", "data")),
+            ("batch", ("data",)),
+            ("seq_sp", ("model",)),
+            ("seq", None),
+            ("d_model", None),  # activations replicated on feature dim
+        ]
+        + _common_weight_rules(),
+    )
+
+
+def decode_rules(mesh: Mesh) -> ShardingRules:
+    """decode_32k: batch over (pod, data); KV heads over model when they
+    divide, otherwise KV *sequence* over model (FlashDecoding split)."""
+    return ShardingRules(
+        mesh,
+        [
+            ("batch", ("pod", "data")),
+            ("batch", ("data",)),
+            ("kv_seq", ("model",)),  # consumed only if kv_heads didn't take it
+            ("seq", None),
+            ("d_model", None),
+        ]
+        + _common_weight_rules(),
+    )
+
+
+def long_context_rules(mesh: Mesh) -> ShardingRules:
+    """long_500k: batch==1 is unshardable; the KV cache / state shards over
+    (data, model) sequence-wise — the whole pod serves one stream."""
+    return ShardingRules(
+        mesh,
+        [
+            ("batch", None),
+            ("kv_seq", ("data", "model")),
+            ("kv_seq", ("data",)),
+            ("seq", None),
+            ("d_model", None),
+        ]
+        + _common_weight_rules(),
+    )
+
+
+def rules_for_shape_kind(mesh: Mesh, kind: str) -> ShardingRules:
+    if kind in ("train", "prefill"):
+        return training_rules(mesh)
+    if kind == "decode":
+        return decode_rules(mesh)
+    if kind == "long":
+        return long_context_rules(mesh)
+    raise ValueError(f"unknown shape kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Padding helpers (automatic vocab/head padding — builder, not user, pads).
+# ---------------------------------------------------------------------------
+
+def padded_size(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= n."""
+    if multiple <= 0:
+        raise ValueError("multiple must be positive")
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def pad_axis_to(x, size: int, axis: int):
+    """Zero-pad ``x`` along ``axis`` to ``size`` (no-op when already there)."""
+    import jax.numpy as jnp
+
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    if cur > size:
+        raise ValueError(f"cannot pad axis {axis} from {cur} down to {size}")
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(x, pads)

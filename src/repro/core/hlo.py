@@ -1,0 +1,166 @@
+"""Parsing of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` does not report collective traffic, so the
+roofline pipeline extracts it from ``compiled.as_text()`` directly: every
+``all-reduce`` / ``all-gather`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op line carries its result shape and replica groups,
+from which per-device link traffic follows (ring algorithm).
+
+Shapes in the partitioned module are per-device shards, so the byte counts
+derived here are *per device*; the roofline collective term is
+``per_device_bytes / link_bw`` == the assignment's
+``collective_bytes / (chips * link_bw)`` with global ``collective_bytes``.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.2 = f32[2,128,512]{2,1,0} all-reduce(%x), channel_id=1,
+#       replica_groups=[4,16]<=[64], ...
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[\w\[\],{} ]+?\)?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(",
+)
+_ARRAY_RE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ngroups>\d+),(?P<gsize>\d+)\]<=")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{(?P<first>[\d,]+)\}")
+
+
+def _array_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] array in a shape string."""
+    total = 0
+    for m in _ARRAY_RE.finditer(text):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int  # per-device bytes of the op result
+    group_size: int
+    line: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-device bytes moved over ICI links (ring algorithm).
+
+        all-reduce moves 2*B*(g-1)/g (reduce-scatter + all-gather phases);
+        all-gather's result IS the gathered array: B*(g-1)/g received;
+        reduce-scatter's result is the shard: each device sends/receives
+        ~B_result*(g-1); all-to-all exchanges (g-1)/g of the buffer;
+        collective-permute forwards the whole buffer once.
+        """
+        g = max(self.group_size, 1)
+        b = float(self.result_bytes)
+        if g == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * b * (g - 1) / g
+        if self.kind == "all-gather":
+            return b * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return b * (g - 1)
+        if self.kind == "all-to-all":
+            return b * (g - 1) / g
+        if self.kind == "collective-permute":
+            return b
+        return b
+
+
+@dataclass
+class CollectiveSummary:
+    ops: list[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(op.link_bytes for op in self.ops)
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(op.result_bytes for op in self.ops)
+
+    def by_kind(self) -> dict[str, tuple[int, float]]:
+        agg: dict[str, tuple[int, float]] = defaultdict(lambda: (0, 0.0))
+        for op in self.ops:
+            n, b = agg[op.kind]
+            agg[op.kind] = (n + 1, b + op.link_bytes)
+        return dict(agg)
+
+    def schedule(self) -> list[str]:
+        """The collective schedule in program order (kind x group size)."""
+        return [f"{op.kind}(g={op.group_size}, {op.result_bytes}B)" for op in self.ops]
+
+    def describe(self) -> str:
+        lines = [f"{'kind':<22}{'count':>6}{'link MiB/device':>18}"]
+        for kind, (n, b) in sorted(self.by_kind().items()):
+            lines.append(f"{kind:<22}{n:>6}{b / 2**20:>18.3f}")
+        lines.append(
+            f"{'TOTAL':<22}{len(self.ops):>6}{self.total_link_bytes / 2**20:>18.3f}"
+        )
+        return "\n".join(lines)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveSummary:
+    """Extract all collective ops (with per-device sizes) from HLO text.
+
+    Ops inside ``while`` bodies appear once; callers lowering scanned
+    programs must scale by trip count themselves (the roofline pipeline
+    lowers unrolled probes precisely to avoid that).
+    """
+    summary = CollectiveSummary()
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue  # async completion op: counted at its -start
+        kind = m.group("op")
+        result_bytes = _array_bytes(m.group("shape"))
+        g = 1
+        gm = _IOTA_GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group("gsize"))
+        else:
+            gm = _EXPL_GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group("first").split(","))
+        summary.ops.append(
+            CollectiveOp(kind=kind, result_bytes=result_bytes, group_size=g, line=line)
+        )
+    return summary
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    """Count occurrences of an HLO op (e.g. 'fusion', 'while', 'custom-call')."""
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

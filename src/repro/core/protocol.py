@@ -1,0 +1,347 @@
+"""CSP process model of the ClusterBuilder application network (Listing 3).
+
+This is a direct transliteration of the paper's CSPm specification into a
+labelled-transition-system (LTS) form that ``core.verify`` can exhaustively
+check, generalised from the paper's ``W = 1`` worker per node to ``W >= 1``
+(the deployed network of Figure 2 has ``cores`` workers behind every
+``nrfa``).
+
+Processes and channels (paper Figure 3):
+
+    Emit --a--> Server(onrl) --c.i--> Client_i(nrfa) --d.i--> Worker_{i,w}
+                      ^------b.i--------|
+    Worker_{i,w} --e.i--> Reducer(afoc+afo) --f--> Collect --finished--> env
+
+All channels are synchronous, unbuffered and unidirectional (CSP semantics:
+a communication happens only when writer and reader are simultaneously
+ready).  Channels ``a..f`` are hidden when checking refinement against
+``TestSystem = finished -> TestSystem``; ``finished`` is the only visible
+event — exactly the setup of Listing 3 lines 50-58.
+
+NOTE — paper erratum: Listing 3 line 28 reads ``Server_End(y) = b?y.S ->
+c!y.UT -> if y == N then SKIP else Server_End(y+1)``.  Taken literally, with
+clients indexed ``0..N-1`` the recursion reaches ``Server_End(N)`` and blocks
+on the non-existent channel ``b.N`` — a deadlock FDR would flag.  We
+implement the evidently-intended ``if y == N-1 then SKIP`` and the verifier
+(tests) demonstrates that the literal version deadlocks while the corrected
+one passes all assertions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable, Iterable
+
+# The Universal Terminator object (paper's ``UT``).
+UT = "UT"
+
+# Process-state sentinel equivalent to CSP SKIP (successful termination).
+SKIP = ("SKIP",)
+
+Event = tuple  # (channel_key, value)
+State = Hashable
+
+
+@dataclass(frozen=True)
+class Output:
+    chan: Hashable
+    value: Any
+    next_state: State
+
+
+@dataclass(frozen=True)
+class Input:
+    chan: Hashable
+    # accept(value) -> next_state, or None to refuse the value.
+    accept: Callable[[Any], State | None]
+
+
+class Process:
+    """A process = initial state + ready-output/ready-input functions."""
+
+    name: str = "proc"
+
+    def initial(self) -> State:
+        raise NotImplementedError
+
+    def outputs(self, state: State) -> list[Output]:
+        return []
+
+    def inputs(self, state: State) -> list[Input]:
+        return []
+
+    def is_terminated(self, state: State) -> bool:
+        return state == SKIP
+
+
+# ---------------------------------------------------------------------------
+# The six process kinds of Listing 3.
+# ---------------------------------------------------------------------------
+
+
+class EmitProc(Process):
+    """Emit(o) = a!o -> if o == UT then SKIP else Emit(create(o))  {3:22}."""
+
+    def __init__(self, num_objects: int):
+        self.name = "emit"
+        self.num_objects = num_objects
+
+    def initial(self) -> State:
+        return ("emit", 0)
+
+    def outputs(self, state: State) -> list[Output]:
+        if state == SKIP:
+            return []
+        _, k = state
+        if k < self.num_objects:
+            return [Output(("a",), k, ("emit", k + 1))]
+        return [Output(("a",), UT, SKIP)]
+
+
+class ServerProc(Process):
+    """The ``onrl`` server {3:24-29} (with the line-28 erratum corrected).
+
+    ``literal_paper_model=True`` reproduces Listing 3 exactly (including the
+    off-by-one) so the verifier can exhibit the deadlock.
+    """
+
+    def __init__(self, nclusters: int, literal_paper_model: bool = False):
+        self.name = "server"
+        self.n = nclusters
+        self.literal = literal_paper_model
+
+    def initial(self) -> State:
+        return ("idle",)
+
+    def inputs(self, state: State) -> list[Input]:
+        if state == ("idle",):
+            # Server() = a?o -> ...
+            def accept(o: Any) -> State:
+                return ("end", 0) if o == UT else ("have", o)
+
+            return [Input(("a",), accept)]
+        if state[0] == "have":
+            # Server_Choice(o) = [] x : {0..N-1} @ Service(x, o); Service
+            # begins b?i.S.
+            o = state[1]
+            return [
+                Input(("b", i), lambda _s, i=i, o=o: ("serve", i, o))
+                for i in range(self.n)
+            ]
+        if state[0] == "end":
+            # Server_End(y) = b?y.S -> c!y.UT -> ...
+            y = state[1]
+            if y < self.n:
+                return [Input(("b", y), lambda _s, y=y: ("end_serve", y))]
+        return []
+
+    def outputs(self, state: State) -> list[Output]:
+        if state and state[0] == "serve":
+            _, i, o = state
+            return [Output(("c", i), o, ("idle",))]
+        if state and state[0] == "end_serve":
+            y = state[1]
+            if self.literal:
+                # Literal Listing 3: `if y == N then SKIP else Server_End(y+1)`
+                nxt = SKIP if y == self.n else ("end", y + 1)
+            else:
+                nxt = SKIP if y == self.n - 1 else ("end", y + 1)
+            return [Output(("c", y), UT, nxt)]
+        return []
+
+
+class ClientProc(Process):
+    """The ``nrfa`` client of node ``i`` {3:30-31}, generalised to W workers.
+
+    Client(i) = b!i.S -> c?i.o -> if o == UT then (d!i.UT * W -> SKIP)
+                                  else (d!i.o -> Client(i))
+
+    The one-place-buffer invariant is structural: the client re-enters the
+    requesting state only *after* the d.i communication completes, so the
+    server can never be blocked by a node with an idle worker (paper §5).
+    """
+
+    def __init__(self, i: int, workers: int):
+        self.name = f"client{i}"
+        self.i = i
+        self.workers = workers
+
+    def initial(self) -> State:
+        return ("req",)
+
+    def outputs(self, state: State) -> list[Output]:
+        if state == ("req",):
+            return [Output(("b", self.i), "S", ("wait",))]
+        if state and state[0] == "deliver":
+            o = state[1]
+            if o == UT:
+                # First of W terminators — one per worker behind this client.
+                nxt = SKIP if self.workers == 1 else ("term", 1)
+                return [Output(("d", self.i), UT, nxt)]
+            return [Output(("d", self.i), o, ("req",))]
+        if state and state[0] == "term":
+            w = state[1]
+            nxt = SKIP if w + 1 == self.workers else ("term", w + 1)
+            return [Output(("d", self.i), UT, nxt)]
+        return []
+
+    def inputs(self, state: State) -> list[Input]:
+        if state == ("wait",):
+            return [Input(("c", self.i), lambda o: ("deliver", o))]
+        return []
+
+
+class WorkerProc(Process):
+    """Worker {3:35-36}: d?i.o -> (e!i.o ->) with UT termination."""
+
+    def __init__(self, i: int, w: int):
+        self.name = f"worker{i}.{w}"
+        self.i = i
+
+    def initial(self) -> State:
+        return ("work",)
+
+    def inputs(self, state: State) -> list[Input]:
+        if state == ("work",):
+            return [Input(("d", self.i), lambda o: ("fwd", o))]
+        return []
+
+    def outputs(self, state: State) -> list[Output]:
+        if state and state[0] == "fwd":
+            o = state[1]
+            nxt = SKIP if o == UT else ("work",)
+            return [Output(("e", self.i), o, nxt)]
+        return []
+
+
+class ReducerProc(Process):
+    """Reducer {3:39-45}, generalised: forwards non-UT objects from any e.i,
+    counts ``N*W`` UTs (one per worker), then emits a single f!UT."""
+
+    def __init__(self, nclusters: int, workers: int):
+        self.name = "reducer"
+        self.n = nclusters
+        self.remaining = nclusters * workers
+
+    def initial(self) -> State:
+        return ("read", self.remaining)
+
+    def inputs(self, state: State) -> list[Input]:
+        if state and state[0] == "read":
+            k = state[1]
+
+            def accept(o: Any, k: int = k) -> State:
+                if o == UT:
+                    return ("fwd_ut",) if k == 1 else ("read", k - 1)
+                return ("fwd", o, k)
+
+            return [Input(("e", i), accept) for i in range(self.n)]
+        return []
+
+    def outputs(self, state: State) -> list[Output]:
+        if state and state[0] == "fwd":
+            _, o, k = state
+            return [Output(("f",), o, ("read", k))]
+        if state == ("fwd_ut",):
+            return [Output(("f",), UT, SKIP)]
+        return []
+
+
+class CollectProc(Process):
+    """Collect {3:46-48}: reads f until UT, then loops on finished!True."""
+
+    def __init__(self) -> None:
+        self.name = "collect"
+
+    def initial(self) -> State:
+        return ("run",)
+
+    def inputs(self, state: State) -> list[Input]:
+        if state == ("run",):
+            return [Input(("f",), lambda o: ("done",) if o == UT else ("run",))]
+        return []
+
+    def outputs(self, state: State) -> list[Output]:
+        if state == ("done",):
+            return [Output(("finished",), True, ("done",))]
+        return []
+
+    def is_terminated(self, state: State) -> bool:
+        return state == ("done",)
+
+
+# ---------------------------------------------------------------------------
+# Network assembly.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ProtocolNetwork:
+    """The composed System of Listing 3 lines 50-51."""
+
+    processes: list[Process]
+    visible_channels: frozenset = frozenset({("finished",)})
+
+    @staticmethod
+    def build(
+        nclusters: int,
+        workers_per_node: int = 1,
+        num_objects: int = 5,
+        literal_paper_model: bool = False,
+    ) -> "ProtocolNetwork":
+        procs: list[Process] = [
+            EmitProc(num_objects),
+            ServerProc(nclusters, literal_paper_model=literal_paper_model),
+        ]
+        for i in range(nclusters):
+            procs.append(ClientProc(i, workers_per_node))
+        for i in range(nclusters):
+            for w in range(workers_per_node):
+                procs.append(WorkerProc(i, w))
+        procs.append(ReducerProc(nclusters, workers_per_node))
+        procs.append(CollectProc())
+        return ProtocolNetwork(processes=procs)
+
+    def initial(self) -> tuple:
+        return tuple(p.initial() for p in self.processes)
+
+    def successors(self, state: tuple) -> Iterable[tuple[Event, tuple]]:
+        """All enabled synchronisations from a global state.
+
+        A transition exists for every (writer, reader) pair that is ready on
+        the same channel and whose reader accepts the offered value.
+        """
+        procs = self.processes
+        # Gather ready outputs and inputs per channel.
+        outs: dict[Hashable, list[tuple[int, Output]]] = {}
+        ins: dict[Hashable, list[tuple[int, Input]]] = {}
+        for pi, proc in enumerate(procs):
+            for out in proc.outputs(state[pi]):
+                outs.setdefault(out.chan, []).append((pi, out))
+            for inp in proc.inputs(state[pi]):
+                ins.setdefault(inp.chan, []).append((pi, inp))
+        for chan, writers in outs.items():
+            if chan in self.visible_channels:
+                # Environment always willing to observe visible events.
+                for pi, out in writers:
+                    ns = list(state)
+                    ns[pi] = out.next_state
+                    yield (chan, out.value), tuple(ns)
+                continue
+            for pi, out in writers:
+                for qi, inp in ins.get(chan, []):
+                    if pi == qi:
+                        continue
+                    nxt = inp.accept(out.value)
+                    if nxt is None:
+                        continue
+                    ns = list(state)
+                    ns[pi] = out.next_state
+                    ns[qi] = nxt
+                    yield (chan, out.value), tuple(ns)
+
+    def is_hidden(self, event: Event) -> bool:
+        return event[0] not in self.visible_channels
+
+    def all_terminated(self, state: tuple) -> bool:
+        return all(p.is_terminated(s) for p, s in zip(self.processes, state))

@@ -1,0 +1,135 @@
+"""Deterministic synthetic data pipeline (the Emit substrate).
+
+The paper's Emit process generates work objects from a sequential data class
+(``Mdata.createInstance``); here the emit stage of a training deployment is a
+*sharded batch pipeline*.  The synthetic stream is:
+
+* **deterministic** — ``tokens[step, b, s] = philox(seed, step, b, s) % vocab``
+  so every restart / re-mesh / elastic resume reproduces the exact stream
+  (the checkpoint records only ``step``);
+* **host-sharded** — each host materialises only its addressable shard and
+  the global array is assembled with ``jax.make_array_from_callback`` (on a
+  single-host CPU container this degenerates to a device_put, but the code
+  path is the multi-host one);
+* **structured** — next-token targets; optional frontend stub embeddings for
+  the VLM/audio archs.
+
+A real corpus plugs in by implementing :class:`BatchSource`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterator, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.channels import ShardingRules
+from repro.core.processes import EmitDetails
+
+
+class BatchSource(Protocol):
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        """Return the *global* (unsharded) numpy batch for ``step``."""
+
+
+@dataclass
+class SyntheticLM(BatchSource):
+    """Philox-counter LM stream: reproducible, seekable, infinite."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend_len: int = 0
+    d_model: int = 0  # for frontend stub embeddings
+    encdec: bool = False
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.Philox(key=self.seed + (step << 20))
+        gen = np.random.Generator(rng)
+        B, S = self.global_batch, self.seq_len
+        tokens = gen.integers(0, self.vocab_size, size=(B, S + 1), dtype=np.int32)
+        out = {"tokens": tokens[:, :S], "targets": tokens[:, 1:]}
+        if self.encdec:
+            out["frames"] = gen.standard_normal((B, S, self.d_model)).astype(
+                np.float32
+            )
+        elif self.frontend_len:
+            out["extra_embeds"] = gen.standard_normal(
+                (B, self.frontend_len, self.d_model)
+            ).astype(np.float32)
+        return out
+
+
+def source_for(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> SyntheticLM:
+    return SyntheticLM(
+        vocab_size=cfg.vocab_size,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+        frontend_len=cfg.frontend_len if cfg.frontend == "vit" else 0,
+        d_model=cfg.d_model,
+        encdec=bool(cfg.encoder_layers),
+    )
+
+
+BATCH_AXES: dict[str, tuple] = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "extra_embeds": ("batch", "seq", "d_model"),
+    "frames": ("batch", "seq", "d_model"),
+}
+
+
+def shard_batch(batch: dict[str, np.ndarray], rules: ShardingRules) -> dict:
+    """Assemble global device arrays from (host-local) numpy shards."""
+    out = {}
+    for name, arr in batch.items():
+        sharding = rules.sharding(arr.shape, BATCH_AXES[name])
+        out[name] = jax.make_array_from_callback(
+            arr.shape, sharding, lambda idx, a=arr: a[idx]
+        )
+    return out
+
+
+class DataPipeline:
+    """step -> sharded device batch, with one-batch prefetch."""
+
+    def __init__(self, source: BatchSource, rules: ShardingRules | None):
+        self.source = source
+        self.rules = rules
+        self._prefetched: tuple[int, Any] | None = None
+
+    def get(self, step: int) -> dict:
+        if self._prefetched is not None and self._prefetched[0] == step:
+            batch = self._prefetched[1]
+            self._prefetched = None
+            return batch
+        return self._materialise(step)
+
+    def prefetch(self, step: int) -> None:
+        if self._prefetched is None or self._prefetched[0] != step:
+            self._prefetched = (step, self._materialise(step))
+
+    def _materialise(self, step: int) -> dict:
+        np_batch = self.source.batch(step)
+        if self.rules is None:
+            return {k: jnp.asarray(v) for k, v in np_batch.items()}
+        return shard_batch(np_batch, self.rules)
+
+
+def emit_details_for(source: BatchSource, num_steps: int) -> EmitDetails:
+    """Adapter: the data pipeline as the DSL's Emit stage (``Mdata`` role)."""
+
+    def create(state):
+        step = state
+        if step >= num_steps:
+            return None, state
+        return (step, source.batch(step)), step + 1
+
+    return EmitDetails(name=type(source).__name__, create=create,
+                       init=lambda: 0, init_data=())

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel: full-materialisation
+causal (optionally sliding-window) softmax attention, f32 accumulation."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Skv, D]
+    v: jax.Array,  # [B, H, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    D = q.shape[-1]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    Sq, Skv = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Jitted wrapper for the RG-LRU scan kernel (padding + backend dispatch)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channels import padded_size
+from repro.kernels.rglru.kernel import BLOCK_W, rglru_scan_pallas
+from repro.kernels.rglru.ref import rglru_scan_reference
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_w"))
+def rglru_scan(
+    a: jax.Array,  # [B, S, W] per-step decay in (0, 1]
+    b: jax.Array,  # [B, S, W] gated input
+    h0: jax.Array | None = None,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_w: int = BLOCK_W,
+):
+    if not use_pallas:
+        return rglru_scan_reference(a, b, h0)
+    B, S, W = a.shape
+    bw = min(block_w, padded_size(W, 128))
+    Wp = padded_size(W, bw)
+    if Wp != W:
+        pad = ((0, 0), (0, 0), (0, Wp - W))
+        a = jnp.pad(a, pad)
+        b = jnp.pad(b, pad)
+        if h0 is not None:
+            h0 = jnp.pad(h0, ((0, 0), (0, Wp - W)))
+    h, hlast = rglru_scan_pallas(a, b, h0, block_w=bw, interpret=interpret)
+    return h[..., :W], hlast[..., :W]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: the plain sequential
+recurrence h_t = a_t * h_{t-1} + b_t, returning all h and the final state."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_reference(a: jax.Array, b: jax.Array, h0=None):
+    """a, b: [B, S, W] f32 -> (h [B, S, W], h_last [B, W])."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, t):
+        h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(S))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), h_last

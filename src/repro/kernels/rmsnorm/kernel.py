@@ -1,0 +1,49 @@
+"""Fused RMS-norm as a Pallas TPU kernel.
+
+Row-blocked: grid over N / BLOCK_N; each program loads a [BLOCK_N, D] panel
+into VMEM, reduces the mean-square per row in f32 on the VPU, applies
+rsqrt + (1 + scale) and writes once — one HBM read + one write per element
+(XLA's unfused graph does ~3 passes at bf16).  D is a single lane panel
+(D <= ~8192 f32 fits comfortably in VMEM at BLOCK_N = 256).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rms_norm_pallas(
+    x: jax.Array,  # [N, D]
+    scale: jax.Array,  # [D]
+    *,
+    eps: float = 1e-6,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+):
+    N, D = x.shape
+    if N % block_n:
+        raise ValueError(f"N={N} must tile by block_n={block_n}")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, scale)

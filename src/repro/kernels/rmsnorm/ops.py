@@ -1,0 +1,38 @@
+"""Jitted wrapper for the fused RMS-norm kernel (reshape + padding)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channels import padded_size
+from repro.kernels.rmsnorm.kernel import BLOCK_N, rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_reference
+
+
+@partial(jax.jit, static_argnames=("eps", "use_pallas", "interpret", "block_n"))
+def rms_norm(
+    x: jax.Array,  # [..., D]
+    scale: jax.Array,  # [D]
+    *,
+    eps: float = 1e-6,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_n: int = BLOCK_N,
+):
+    if not use_pallas:
+        return rms_norm_reference(x.reshape(-1, x.shape[-1]), scale, eps).reshape(
+            x.shape
+        )
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    N = x2.shape[0]
+    bn = min(block_n, padded_size(N, 8))
+    Np = padded_size(N, bn)
+    if Np != N:
+        x2 = jnp.pad(x2, ((0, Np - N), (0, 0)))
+    out = rms_norm_pallas(x2, scale, eps=eps, block_n=bn, interpret=interpret)
+    return out[:N].reshape(orig_shape)

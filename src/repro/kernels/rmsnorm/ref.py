@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RMS-norm kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_reference(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    """x: [N, D]; scale: [D] (zero-centred: output *= (1 + scale))."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

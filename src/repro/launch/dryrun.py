@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+The two lines above MUST stay first: jax locks the device count at first
+initialisation, and the dry-run needs 512 placeholder host devices to build
+the production meshes.  (Smoke tests and benches must NOT import this
+module — they see 1 device.)
+
+Per cell this proves, with zero allocation (ShapeDtypeStruct inputs):
+
+* the builder-derived shardings compose (no mismatched collectives),
+* the program partitions onto 16x16 and 2x16x16 meshes,
+* ``memory_analysis()`` -> per-device bytes (does it fit 16 GiB HBM v5e?),
+* ``cost_analysis()``   -> per-device FLOPs/bytes (roofline numerators),
+* the collective schedule (parsed from partitioned HLO).
+
+Results are cached as JSON under ``results/dryrun/`` for EXPERIMENTS.md.
+Usage::
+
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import all_cells, get_config, get_shape
+from repro.core.builder import ClusterBuilder
+from repro.core.channels import rules_for_shape_kind
+from repro.core.hlo import parse_collectives
+from repro.launch.mesh import HBM_BYTES, make_production_mesh, model_axis_size
+from repro.models.flops import step_flops
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import steps as steps_mod
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(step_fn, example_args) for one cell — shared with roofline probes."""
+    rules = rules_for_shape_kind(mesh, shape.kind)
+    tp = model_axis_size(mesh)
+    opt_cfg = AdamWConfig()
+    if shape.kind == "train":
+        fn = steps_mod.make_train_step(cfg, opt_cfg, tp=tp, rules=rules)
+        p, o = steps_mod.train_state_structs(cfg, rules, tp, opt_cfg)
+        b = steps_mod.batch_structs(cfg, shape, rules)
+        args = (p, o, b, jax.ShapeDtypeStruct((), jnp.int32))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, tp=tp, rules=rules)
+        p, _ = steps_mod.train_state_structs(cfg, rules, tp, opt_cfg)
+        b = steps_mod.prefill_batch_structs(cfg, shape, rules)
+        args = (p, b)
+        donate = ()
+    else:  # decode / long
+        fn = steps_mod.make_decode_step(cfg, tp=tp, rules=rules)
+        p, _ = steps_mod.train_state_structs(cfg, rules, tp, opt_cfg)
+        cache, tokens, cache_len = steps_mod.decode_input_structs(
+            cfg, shape, rules, tp
+        )
+        args = (p, cache, tokens, cache_len)
+        donate = (1,)
+    return fn, args, donate, rules, tp
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    fn, args, donate, rules, tp = build_cell(cfg, shape, mesh)
+    builder = ClusterBuilder(mesh=mesh, rules=rules)
+    art = builder.build_step(
+        fn, args, name=f"{arch}/{shape_name}", donate_argnums=donate
+    )
+    load_s = time.perf_counter() - t0
+
+    ma = art.memory()
+    cost = art.cost()
+    colls = art.collectives()
+    chips = mesh.devices.size
+    fl = step_flops(cfg, shape, tp=tp)
+    per_dev_bytes = (
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "ok": True,
+        "load_compile_s": round(load_s, 2),
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "live_bytes_per_device": per_dev_bytes,
+            "fits_hbm": bool(per_dev_bytes <= HBM_BYTES),
+            "hbm_fraction": round(per_dev_bytes / HBM_BYTES, 4),
+        },
+        # NOTE: scan bodies counted once (see launch.roofline for totals).
+        "cost_analysis": cost,
+        "collectives": {
+            "by_kind": {
+                k: {"count": n, "link_MiB_per_device": round(b / 2**20, 3)}
+                for k, (n, b) in colls.by_kind().items()
+            },
+            "total_ops": len(colls.ops),
+            "total_link_MiB_per_device": round(colls.total_link_bytes / 2**20, 3),
+        },
+        "model_flops_global": fl.model_flops,
+        "params_total": fl.params_total,
+        "params_active": fl.params_active,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [
+            (cfg.name, shape.name, mp)
+            for cfg, shape, runnable in all_cells()
+            if runnable
+            for mp in (False, True)
+        ]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape_name, mp in cells:
+        tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            result = dryrun_cell(arch, shape_name, mp)
+            mem = result["memory"]
+            print(
+                f"  ok in {result['load_compile_s']}s: "
+                f"{mem['live_bytes_per_device'] / 2**30:.2f} GiB/device "
+                f"(HBM {100 * mem['hbm_fraction']:.1f}%), "
+                f"{result['collectives']['total_ops']} collectives, "
+                f"flops/dev {result['cost_analysis']['flops_per_device']:.3e}",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 - recorded per cell
+            failures += 1
+            result = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if mp else "16x16",
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"  FAILED: {result['error']}", flush=True)
+        with open(path, "w") as fh:
+            json.dump(result, fh, indent=2)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+    print("all requested dry-run cells compiled")
+
+
+if __name__ == "__main__":
+    main()

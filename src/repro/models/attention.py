@@ -1,0 +1,247 @@
+"""Attention: GQA with RoPE, blockwise (memory-bounded) softmax, sliding
+windows, KV-cache decode with sequence-sharded caches.
+
+Three execution paths, one semantics (tested against each other):
+
+* ``attention_reference`` — plain O(S^2) jnp, the oracle;
+* ``attention_blockwise`` — lax.scan over query chunks with running
+  (max, denominator) accumulation: never materialises an S x S tensor, so
+  remat + long prefill stay within HBM.  This is the XLA path used by the
+  dry-run; the Pallas flash kernel (``repro.kernels.flash_attention``)
+  implements the same tiling for the TPU target;
+* ``decode_attention`` — single-token attention against a cache whose
+  sequence axis may be sharded (FlashDecoding-style: XLA inserts the tiny
+  max/sum all-reduces when the sharding rules put ``kv_seq`` on a mesh axis).
+
+Shapes follow the [B, S, H, D] convention; GQA folds q heads into
+``(kv_heads, q_per_kv)`` groups for the einsums.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] or [S]."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B?, S, half]
+    if angles.ndim == 2:  # [S, half] -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, S, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference attention (oracle)
+# ---------------------------------------------------------------------------
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KV, D].  Returns [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if logit_softcap > 0:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (flash-style in XLA; memory O(chunk * S))
+# ---------------------------------------------------------------------------
+
+
+def attention_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_chunk: int = 512,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jax.Array:
+    """Scan over query chunks; softmax with running max/denominator.
+
+    For ``window > 0`` only a fixed-size KV slice (window + chunk, dynamic
+    start) is touched per query chunk, making sliding-window layers
+    O(S * window) in both FLOPs and memory.  ``unroll`` replaces the scan
+    with a python loop (exact XLA cost_analysis; roofline probes only).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk != 0:
+        raise ValueError(f"Sq={Sq} not divisible by q_chunk={q_chunk}")
+    n_chunks = Sq // q_chunk
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, n_chunks, q_chunk, KV, G, D)
+    kv_pos_full = jnp.arange(Skv)
+
+    use_window_slice = window > 0 and Skv > (window + q_chunk)
+    slice_len = min(Skv, window + q_chunk) if window > 0 else Skv
+
+    def chunk_body(carry, inputs):
+        del carry
+        ci, q_i = inputs  # q_i: [B, q_chunk, KV, G, D]
+        q_start = ci * q_chunk + q_offset
+        q_pos = q_start + jnp.arange(q_chunk)
+        if use_window_slice:
+            # KV slice covering [q_start - window + 1, q_start + q_chunk).
+            start = jnp.clip(q_start + q_chunk - slice_len, 0, Skv - slice_len)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, slice_len, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, slice_len, axis=1)
+            kv_pos = start + jnp.arange(slice_len)
+        else:
+            k_i, v_i, kv_pos = k, v, kv_pos_full
+        scores = (
+            jnp.einsum(
+                "bqkgd,bskd->bkgqs",
+                q_i.astype(jnp.float32),
+                k_i.astype(jnp.float32),
+            )
+            * scale
+        )
+        if logit_softcap > 0:
+            scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+        mask = jnp.ones((q_chunk, kv_pos.shape[0]), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        # Rows fully masked (can happen for padded heads) -> max == NEG_INF.
+        m = jnp.maximum(m, -1e29)
+        p = jnp.exp(scores - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p, v_i.astype(jnp.float32))
+        o = o / jnp.maximum(denom, 1e-30)
+        return None, o.astype(q.dtype)  # [B, KV, G, q_chunk, D]
+
+    if unroll:
+        outs = jnp.stack(
+            [chunk_body(None, (ci, qg[:, ci]))[1] for ci in range(n_chunks)]
+        )
+    else:
+        _, outs = jax.lax.scan(
+            chunk_body,
+            None,
+            (jnp.arange(n_chunks), jnp.moveaxis(qg, 1, 0)),
+        )
+    # outs: [n_chunks, B, KV, G, q_chunk, D] -> [B, Sq, H, D]
+    out = jnp.moveaxis(outs, 0, 3)  # [B, KV, G, n_chunks, q_chunk, D]
+    out = out.reshape(B, KV, G, Sq, D)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs cache; cache seq may be sharded)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cache_len,
+    *,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """q: [B, 1, H, D]; cache_k/v: [B, Skv, KV, D]; cache_len: scalar or [B].
+
+    Softmax reduces over the (possibly sharded) cache sequence axis; under
+    sequence sharding XLA emits small all-reduces for the max/denominator
+    and the weighted-value sum — the FlashDecoding pattern.
+    """
+    B, _, H, D = q.shape
+    Skv, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if logit_softcap > 0:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    kv_pos = jnp.arange(Skv)
+    valid = kv_pos[None] < jnp.reshape(cache_len, (-1, 1))  # [B, Skv]
+    if window > 0:
+        valid &= kv_pos[None] >= jnp.reshape(cache_len, (-1, 1)) - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(
+    q, k, v, *, causal=True, window=0, logit_softcap=0.0, q_chunk=512,
+    q_offset=0, unroll=False,
+):
+    """Dispatch: blockwise when the chunking pays, reference otherwise."""
+    Sq = q.shape[1]
+    if Sq % q_chunk != 0:  # ragged tail (e.g. serving prefill): best divisor
+        q_chunk = max(
+            (d for d in range(1, q_chunk + 1) if Sq % d == 0), default=1
+        )
+    if Sq <= q_chunk or q_chunk == 1:
+        return attention_reference(
+            q, k, v, causal=causal, window=window,
+            logit_softcap=logit_softcap, q_offset=q_offset,
+        )
+    return attention_blockwise(
+        q, k, v, causal=causal, window=window,
+        logit_softcap=logit_softcap, q_chunk=q_chunk, q_offset=q_offset,
+        unroll=unroll,
+    )

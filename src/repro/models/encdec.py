@@ -1,0 +1,247 @@
+"""Encoder-decoder transformer backbone (seamless-m4t style).
+
+The audio modality frontend is a **stub** per the assignment: ``input_specs``
+supplies precomputed frame embeddings [B, S_enc, D].  The backbone is fully
+real: a bidirectional encoder stack and a causal decoder with cross-attention,
+sharing all layer machinery with ``models.lm``.
+
+Decode state = per-layer self-attention KV cache + the (static) per-layer
+cross-attention K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.channels import ShardingRules
+from repro.models import attention as attn_mod
+from repro.models.common import ParamSpec, fan_in_normal
+from repro.models.layers import chunked_cross_entropy, embed_tokens, rms_norm, swiglu
+from repro.models.lm import (
+    _constrain,
+    _remat_policy,
+    _tree_slice,
+    head_plan,
+    lm_head_weight,
+    logits_from_hidden,
+    mlp_specs,
+)
+
+
+def _proj_specs(cfg: ModelConfig, n: int, tp: int, prefix_kv_from_enc: bool = False):
+    hp = head_plan(cfg, tp)
+    D, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": ParamSpec((n, D, hp["Hp"] * hd), ("layers", "d_model_fsdp", "d_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wk": ParamSpec((n, D, hp["Kp"] * hd), ("layers", "d_model_fsdp", "d_kv_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wv": ParamSpec((n, D, hp["Kp"] * hd), ("layers", "d_model_fsdp", "d_kv_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wo": ParamSpec((n, hp["Hp"] * hd, D), ("layers", "d_attn", "d_model_fsdp"),
+                        stddev=fan_in_normal((hp["Hp"] * hd, 0), fan_axis=0)),
+    }
+
+
+def encdec_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
+    D = cfg.d_model
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    Vp = cfg.padded_vocab(tp)
+    enc_block = {
+        "ln1": ParamSpec((ne, D), ("layers", "d_model"), init="zeros"),
+        "self": _proj_specs(cfg, ne, tp),
+        "ln2": ParamSpec((ne, D), ("layers", "d_model"), init="zeros"),
+        "mlp": mlp_specs(D, cfg.d_ff, ne),
+    }
+    dec_block = {
+        "ln1": ParamSpec((nd, D), ("layers", "d_model"), init="zeros"),
+        "self": _proj_specs(cfg, nd, tp),
+        "ln_x": ParamSpec((nd, D), ("layers", "d_model"), init="zeros"),
+        "cross": _proj_specs(cfg, nd, tp),
+        "ln2": ParamSpec((nd, D), ("layers", "d_model"), init="zeros"),
+        "mlp": mlp_specs(D, cfg.d_ff, nd),
+    }
+    return {
+        "embed": ParamSpec((Vp, D), ("vocab", "d_model_fsdp"), stddev=0.02),
+        "encoder": {"blocks": enc_block,
+                    "final_norm": ParamSpec((D,), ("d_model",), init="zeros")},
+        "decoder": {"blocks": dec_block,
+                    "final_norm": ParamSpec((D,), ("d_model",), init="zeros")},
+        "lm_head": ParamSpec((D, Vp), ("d_model_fsdp", "vocab"),
+                             stddev=fan_in_normal((D, Vp))),
+    }
+
+
+def _mha(cfg, p, xq, xkv, positions_q, positions_kv, *, causal, tp, rules,
+         cache=None, cache_len=None, rope=True):
+    """Generic attention for enc/dec (optionally cached K/V)."""
+    hp = head_plan(cfg, tp)
+    Hp, Kp, hd = hp["Hp"], hp["Kp"], cfg.head_dim
+    B, Sq, _ = xq.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,da->bsa", xq, p["wq"].astype(cdt)).reshape(B, Sq, Hp, hd)
+    if rope:
+        q = attn_mod.apply_rope(q, positions_q, cfg.rope_theta)
+    if cache is not None and "k_static" in cache:  # cross-attention decode
+        k, v = cache["k_static"], cache["v_static"]
+        out = attn_mod.decode_attention(q, k, v, cache["len_static"])
+        return out.reshape(B, Sq, Hp * hd), None
+    k = jnp.einsum("bsd,da->bsa", xkv, p["wk"].astype(cdt)).reshape(
+        B, -1, Kp, hd)
+    v = jnp.einsum("bsd,da->bsa", xkv, p["wv"].astype(cdt)).reshape(
+        B, -1, Kp, hd)
+    if rope:
+        k = attn_mod.apply_rope(k, positions_kv, cfg.rope_theta)
+    if cache is not None:  # self-attention decode
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        out = attn_mod.decode_attention(q, ck, cv, cache_len + Sq)
+        return out.reshape(B, Sq, Hp * hd), {"k": ck, "v": cv}
+    out = attn_mod.attention(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+                             unroll=cfg.unroll_scans)
+    return out.reshape(B, Sq, Hp * hd), {"k": k, "v": v}
+
+
+def _enc_block(cfg, p, x, positions, tp, rules):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, _ = _mha(cfg, p["self"], h, h, positions, positions,
+                causal=False, tp=tp, rules=rules)
+    x = x + jnp.einsum("bsa,ad->bsd", a, p["self"]["wo"].astype(cdt)).astype(x.dtype)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"],
+                   cdt).astype(x.dtype)
+    return _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+
+
+def _dec_block(cfg, p, x, enc_out, pos_q, pos_enc, tp, rules,
+               cache=None, cache_len=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    new_cache = None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    a, kv = _mha(cfg, p["self"], h, h, pos_q, pos_q, causal=True, tp=tp,
+                 rules=rules, cache=self_cache, cache_len=cache_len)
+    x = x + jnp.einsum("bsa,ad->bsd", a, p["self"]["wo"].astype(cdt)).astype(x.dtype)
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    if cache is not None:
+        xc = {"k_static": cache["xk"], "v_static": cache["xv"],
+              "len_static": cache["xk"].shape[1]}
+        a, _ = _mha(cfg, p["cross"], h, None, pos_q, None, causal=False,
+                    tp=tp, rules=rules, cache=xc, rope=False)
+    else:
+        a, _ = _mha(cfg, p["cross"], h, enc_out, pos_q, pos_enc,
+                    causal=False, tp=tp, rules=rules, rope=False)
+    x = x + jnp.einsum("bsa,ad->bsd", a, p["cross"]["wo"].astype(cdt)).astype(x.dtype)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"],
+                   cdt).astype(x.dtype)
+    if cache is not None and kv is not None:
+        new_cache = {"k": kv["k"], "v": kv["v"]}
+    return _constrain(rules, x, ("batch", "seq_sp", "d_model")), new_cache
+
+
+def encode(cfg: ModelConfig, params, frames, *, tp=1, rules=None):
+    """frames: [B, S_enc, D] stub embeddings -> encoder output."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+    positions = jnp.arange(x.shape[1])
+    blocks = params["encoder"]["blocks"]
+
+    def body(x, pslice):
+        fn = lambda p, x: _enc_block(cfg, p, x, positions, tp, rules)  # noqa: E731
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=_remat_policy(cfg))
+        return fn(pslice, x), None
+
+    if cfg.scan_layers and cfg.encoder_layers > 1:
+        x, _ = jax.lax.scan(body, x, blocks)
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, _tree_slice(blocks, i))
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, tp=1, rules=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt) * math.sqrt(cfg.d_model)
+    x = _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+    pos_q = jnp.arange(tokens.shape[1])
+    pos_enc = jnp.arange(enc_out.shape[1])
+    blocks = params["decoder"]["blocks"]
+
+    def body(x, pslice):
+        fn = lambda p, x: _dec_block(  # noqa: E731
+            cfg, p, x, enc_out, pos_q, pos_enc, tp, rules)[0]
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=_remat_policy(cfg))
+        return fn(pslice, x), None
+
+    if cfg.scan_layers and cfg.num_layers > 1:
+        x, _ = jax.lax.scan(body, x, blocks)
+    else:
+        for i in range(cfg.num_layers):
+            x, _ = body(x, _tree_slice(blocks, i))
+    return rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, *, tp=1, rules=None):
+    """batch: frames [B, S_enc, D], tokens/targets [B, S_dec]."""
+    enc_out = encode(cfg, params, batch["frames"], tp=tp, rules=rules)
+    x = decode_train(cfg, params, batch["tokens"], enc_out, tp=tp, rules=rules)
+    ce = chunked_cross_entropy(
+        x, params["lm_head"], batch["targets"],
+        vocab_size=cfg.vocab_size, seq_chunk=cfg.loss_seq_chunk,
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+        unroll=cfg.unroll_scans,
+    )
+    return ce, {"ce_loss": ce, "loss": ce}
+
+
+def init_encdec_cache(cfg: ModelConfig, params, enc_out, max_seq, tp=1):
+    """Self-attn cache + per-layer static cross K/V from encoder output."""
+    hp = head_plan(cfg, tp)
+    B = enc_out.shape[0]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    nd = cfg.num_layers
+    xk, xv = [], []
+    for i in range(nd):
+        p = _tree_slice(params["decoder"]["blocks"], i)
+        k = jnp.einsum("bsd,da->bsa", enc_out, p["cross"]["wk"].astype(cdt))
+        v = jnp.einsum("bsd,da->bsa", enc_out, p["cross"]["wv"].astype(cdt))
+        xk.append(k.reshape(B, -1, hp["Kp"], cfg.head_dim))
+        xv.append(v.reshape(B, -1, hp["Kp"], cfg.head_dim))
+    return {
+        "k": jnp.zeros((nd, B, max_seq, hp["Kp"], cfg.head_dim), cdt),
+        "v": jnp.zeros((nd, B, max_seq, hp["Kp"], cfg.head_dim), cdt),
+        "xk": jnp.stack(xk),
+        "xv": jnp.stack(xv),
+    }
+
+
+def encdec_decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
+                       *, tp=1, rules=None):
+    """One decoder step against the cross/self caches."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt) * math.sqrt(cfg.d_model)
+    pos_q = jnp.reshape(cache_len, (1,)) + jnp.arange(1)
+    new_cache = dict(cache)
+    for i in range(cfg.num_layers):
+        p = _tree_slice(params["decoder"]["blocks"], i)
+        layer_cache = {"k": cache["k"][i], "v": cache["v"][i],
+                       "xk": cache["xk"][i], "xv": cache["xv"][i]}
+        x, kv = _dec_block(cfg, p, x, None, pos_q, None, tp, rules,
+                           cache=layer_cache, cache_len=cache_len)
+        new_cache["k"] = new_cache["k"].at[i].set(kv["k"])
+        new_cache["v"] = new_cache["v"].at[i].set(kv["v"])
+    x = rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt),
+                        params["lm_head"].astype(cdt))
+    return logits, new_cache

@@ -1,0 +1,142 @@
+"""Shared layers: norms, gated MLPs, embeddings, chunked cross-entropy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, fan_in_normal
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rms_norm_spec(d: int, layers: int | None = None) -> ParamSpec:
+    if layers is None:
+        return ParamSpec((d,), ("d_model",), init="zeros")
+    return ParamSpec((layers, d), ("layers", "d_model"), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down, compute_dtype=jnp.bfloat16):
+    """x: [..., D]; w_gate/w_up: [D, F]; w_down: [F, D]."""
+    xc = x.astype(compute_dtype)
+    g = jnp.einsum("...d,df->...f", xc, w_gate.astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", xc, w_up.astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(compute_dtype))
+
+
+def gelu_mlp(x: jax.Array, w_up, w_down, compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", xc, w_up.astype(compute_dtype)))
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(compute_dtype))
+
+
+def mlp_specs(d: int, f: int, layers: int) -> dict:
+    return {
+        "w_gate": ParamSpec(
+            (layers, d, f), ("layers", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, f)),
+        ),
+        "w_up": ParamSpec(
+            (layers, d, f), ("layers", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, f)),
+        ),
+        "w_down": ParamSpec(
+            (layers, f, d), ("layers", "d_ff", "d_model_fsdp"),
+            stddev=fan_in_normal((f, d)),
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array, compute_dtype):
+    return jnp.take(embedding, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(x: jax.Array, head: jax.Array, compute_dtype, softcap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", x.astype(compute_dtype), head.astype(compute_dtype))
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits.astype(jnp.float32) / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(
+    x: jax.Array,
+    head: jax.Array,
+    targets: jax.Array,
+    *,
+    vocab_size: int,
+    seq_chunk: int = 512,
+    softcap: float = 0.0,
+    compute_dtype=jnp.bfloat16,
+    unroll: bool = False,
+) -> jax.Array:
+    """Mean next-token CE without materialising [B, S, V] fp32 logits.
+
+    ``x``: [B, S, D] final hidden states; ``head``: [D, V_padded];
+    ``targets``: [B, S] int32.  Scans over sequence chunks: each step
+    materialises only [B, chunk, V_padded] logits.  Padded vocab entries are
+    masked with -inf so they never contribute to the partition function.
+    """
+    B, S, D = x.shape
+    Vp = head.shape[1]
+    seq_chunk = min(seq_chunk, S)
+    if S % seq_chunk != 0:
+        raise ValueError(f"S={S} not divisible by seq_chunk={seq_chunk}")
+    n = S // seq_chunk
+    xs = jnp.moveaxis(x.reshape(B, n, seq_chunk, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, seq_chunk), 1, 0)
+    pad_mask = (jnp.arange(Vp) >= vocab_size)[None, None, :]
+
+    def body(acc, inp):
+        xc, tc = inp
+        logits = lm_logits(xc, head, compute_dtype, softcap).astype(jnp.float32)
+        logits = jnp.where(pad_mask, NEG_INF_F32, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            total, _ = body(total, (xs[i], ts[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts))
+    return total / (B * S)
+
+
+NEG_INF_F32 = -1e30

@@ -1,0 +1,693 @@
+"""Decoder-only language model covering every assigned family.
+
+One parameter-spec builder + one forward covers dense (GQA/RoPE/SwiGLU),
+sliding-window & hybrid patterns (gemma3, recurrentgemma), MoE (llama4,
+olmoe), and xLSTM — the layer *pattern* from the config decides which block
+types exist and in which order.  Per-type parameters are stacked
+``[count, ...]`` so full periods run under ``lax.scan`` (compact HLO, fast
+compile) with the pattern remainder unrolled; decode paths unroll everything
+(small graphs, exact cost analysis).
+
+TP head policy (see DESIGN.md):
+  * q heads padded to ``padded_size(H, tp)``; zero-initialised extra heads
+    feed zero ``w_o`` columns, so outputs are exact.
+  * KV heads padded to ``Hp / q_per_kv`` when that keeps GQA grouping intact;
+    otherwise (llama4's g=5) the *expanded-KV* path gathers K/V per q head
+    (``kv_index``), which shards over any head count.
+  * vocab padded to the TP degree; padded logits masked at the loss.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.channels import ShardingRules, padded_size
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import ParamSpec, fan_in_normal
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed_tokens,
+    lm_logits,
+    mlp_specs,
+    rms_norm,
+    swiglu,
+)
+
+ATTN_KINDS = ("attn", "local", "global", "moe")
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# Head-padding policy
+# ---------------------------------------------------------------------------
+
+
+def head_plan(cfg: ModelConfig, tp: int) -> dict:
+    """Resolve the TP attention plan: padded head counts + grouping mode."""
+    H, KV, g = cfg.num_heads, cfg.num_kv_heads, cfg.q_per_kv
+    Hp = padded_size(H, tp) if tp > 1 else H
+    if KV == 1:
+        return {"Hp": Hp, "Kp": 1, "mode": "grouped"}
+    if Hp % g == 0 and Hp // g >= KV:
+        return {"Hp": Hp, "Kp": Hp // g, "mode": "grouped"}
+    return {"Hp": Hp, "Kp": KV, "mode": "expand_kv"}
+
+
+def _kv_index(cfg: ModelConfig, Hp: int) -> jnp.ndarray:
+    """Static per-(padded)-q-head KV head assignment (expand_kv mode)."""
+    idx = [min(h // cfg.q_per_kv, cfg.num_kv_heads - 1) for h in range(cfg.num_heads)]
+    idx += [0] * (Hp - cfg.num_heads)
+    return jnp.asarray(idx, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, n: int, tp: int) -> dict:
+    hp = head_plan(cfg, tp)
+    D, hd = cfg.d_model, cfg.head_dim
+    specs = {
+        "ln1": ParamSpec((n, D), ("layers", "d_model"), init="zeros"),
+        "wq": ParamSpec((n, D, hp["Hp"] * hd),
+                        ("layers", "d_model_fsdp", "d_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wk": ParamSpec((n, D, hp["Kp"] * hd),
+                        ("layers", "d_model_fsdp", "d_kv_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wv": ParamSpec((n, D, hp["Kp"] * hd),
+                        ("layers", "d_model_fsdp", "d_kv_attn"),
+                        stddev=fan_in_normal((D, 0))),
+        "wo": ParamSpec((n, hp["Hp"] * hd, D),
+                        ("layers", "d_attn", "d_model_fsdp"),
+                        stddev=fan_in_normal((hp["Hp"] * hd, 0), fan_axis=0)),
+    }
+    if cfg.use_qk_norm:
+        specs["q_norm"] = ParamSpec((n, hd), ("layers", None), init="zeros")
+        specs["k_norm"] = ParamSpec((n, hd), ("layers", None), init="zeros")
+    return specs
+
+
+def _block_specs(cfg: ModelConfig, kind: str, n: int, tp: int) -> dict:
+    D = cfg.d_model
+    if kind in ("attn", "local", "global"):
+        specs = _attn_specs(cfg, n, tp)
+        if cfg.d_ff > 0:
+            specs["ln2"] = ParamSpec((n, D), ("layers", "d_model"), init="zeros")
+            specs["mlp"] = mlp_specs(D, cfg.d_ff, n)
+        return specs
+    if kind == "moe":
+        specs = _attn_specs(cfg, n, tp)
+        specs["ln2"] = ParamSpec((n, D), ("layers", "d_model"), init="zeros")
+        specs["moe"] = moe_mod.moe_param_specs(
+            n, D, cfg.moe_d_ff, cfg.num_experts,
+            cfg.num_shared_experts, cfg.moe_d_ff,
+        )
+        return specs
+    if kind == "rec":
+        width = cfg.rnn_width or cfg.d_model
+        specs = {
+            "ln1": ParamSpec((n, D), ("layers", "d_model"), init="zeros"),
+            "rec": rec_mod.recurrent_block_specs(n, D, width, cfg.conv1d_width),
+        }
+        if cfg.d_ff > 0:
+            specs["ln2"] = ParamSpec((n, D), ("layers", "d_model"), init="zeros")
+            specs["mlp"] = mlp_specs(D, cfg.d_ff, n)
+        return specs
+    if kind == "mlstm":
+        return {
+            "ln1": ParamSpec((n, D), ("layers", "d_model"), init="zeros"),
+            "core": xlstm_mod.mlstm_block_specs(n, D, cfg.num_heads, cfg.head_dim),
+        }
+    if kind == "slstm":
+        return {
+            "ln1": ParamSpec((n, D), ("layers", "d_model"), init="zeros"),
+            "core": xlstm_mod.slstm_block_specs(n, D, cfg.num_heads, cfg.head_dim),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def lm_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
+    Vp = cfg.padded_vocab(tp)
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((Vp, cfg.d_model), ("vocab", "d_model_fsdp"),
+                           stddev=0.02),
+        "final_norm": ParamSpec((cfg.d_model,), ("d_model",), init="zeros"),
+        "blocks": {
+            kind: _block_specs(cfg, kind, n, tp)
+            for kind, n in cfg.layer_counts().items()
+        },
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec(
+            (cfg.d_model, Vp), ("d_model_fsdp", "vocab"),
+            stddev=fan_in_normal((cfg.d_model, Vp)),
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _constrain(rules: ShardingRules | None, x, axes):
+    if rules is None:
+        return x
+    return rules.constraint(x, axes)
+
+
+def _attention_part(cfg, p, x, positions, *, kind, tp, rules, cache, cache_len,
+                    return_state=False):
+    """Shared attention sub-block. Returns (attn_out, state).
+
+    ``cache`` (decode): {"k","v"} [B, Scache, Kp, hd].  ``local`` layers use
+    a *ring buffer* of exactly the window size — keys carry RoPE for their
+    true positions, so slot order is irrelevant (attention is permutation
+    invariant over KV) and no window mask is needed.
+    ``return_state`` (prefill): returns this segment's fresh {"k","v"}.
+    """
+    hp = head_plan(cfg, tp)
+    Hp, Kp, hd = hp["Hp"], hp["Kp"], cfg.head_dim
+    B, S, D = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,da->bsa", h, p["wq"].astype(cdt)).reshape(B, S, Hp, hd)
+    k = jnp.einsum("bsd,da->bsa", h, p["wk"].astype(cdt)).reshape(B, S, Kp, hd)
+    v = jnp.einsum("bsd,da->bsa", h, p["wv"].astype(cdt)).reshape(B, S, Kp, hd)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
+    k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.constrain_attn:
+        q = _constrain(rules, q, ("batch", "seq", "heads", "head_dim"))
+    window = cfg.window_size if kind == "local" else 0
+
+    def expand(kx, vx, full=False):
+        """Expand KV heads to the padded q-head count.
+
+        ``full`` (train/prefill): ALWAYS expand, so the attention einsums
+        see one head axis of size Hp (divisible by tp).  The grouped
+        (kv, g) factorisation leaves neither factor divisible by the model
+        axis for most archs (yi: 4 x 8 vs tp=16) and GSPMD then replicates
+        the f32 score tensors.  Decode keeps the grouped layout: its cache
+        is sequence-sharded by the rules, so heads need not shard.
+        """
+        if hp["mode"] == "expand_kv":
+            idx = _kv_index(cfg, Hp)
+            return jnp.take(kx, idx, axis=2), jnp.take(vx, idx, axis=2)
+        if full and Kp != Hp:
+            return (jnp.repeat(kx, Hp // Kp, axis=2),
+                    jnp.repeat(vx, Hp // Kp, axis=2))
+        return kx, vx
+
+    state = None
+    if cache is not None:
+        # Decode: append one token to the cache, attend over it.  cache_len
+        # may be scalar (lockstep decode shapes) or [B] (continuous batching:
+        # every serving slot has its own length).
+        ck, cv = cache["k"], cache["v"]
+        size = ck.shape[1]
+        slot = jnp.mod(cache_len, size) if kind == "local" else cache_len
+        if jnp.ndim(cache_len) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), slot, axis=1)
+        else:
+            bidx = jnp.arange(B)
+            ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+        valid = jnp.minimum(cache_len + S, size)
+        k_att, v_att = expand(ck, cv)
+        out = attn_mod.decode_attention(q, k_att, v_att, valid)
+        state = {"k": ck, "v": cv}
+    else:
+        k_att, v_att = expand(k, v, full=True)
+        if cfg.constrain_attn:
+            k_att = _constrain(rules, k_att,
+                               ("batch", "seq", "heads", "head_dim"))
+            v_att = _constrain(rules, v_att,
+                               ("batch", "seq", "heads", "head_dim"))
+        out = attn_mod.attention(
+            q, k_att, v_att, causal=True, window=window,
+            q_chunk=cfg.attn_q_chunk, unroll=cfg.unroll_scans,
+        )
+        if return_state:
+            state = {"k": k, "v": v}
+    if cfg.constrain_attn:
+        out = _constrain(rules, out, ("batch", "seq", "heads", "head_dim"))
+    out = out.reshape(B, S, Hp * hd)
+    out = jnp.einsum("bsa,ad->bsd", out, p["wo"].astype(cdt))
+    return out.astype(x.dtype), state
+
+
+def apply_block(cfg, kind, p, x, positions, *, tp=1, rules=None,
+                cache=None, cache_len=None, return_state=False):
+    """One residual block of the given kind.  Returns (x, new_cache, aux)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    aux: dict[str, jax.Array] = {}
+    new_cache = None
+    if kind in ATTN_KINDS:
+        attn_out, new_kv = _attention_part(
+            cfg, p, x, positions, kind=kind, tp=tp, rules=rules,
+            cache=cache, cache_len=cache_len, return_state=return_state,
+        )
+        x = x + attn_out
+        if kind == "moe":
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            moe_out, aux = moe_mod.moe_ffn(
+                h, p["moe"], num_experts=cfg.num_experts,
+                top_k=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor, compute_dtype=cdt,
+                dispatch=cfg.moe_dispatch,
+            )
+            x = x + moe_out
+        elif cfg.d_ff > 0:
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                           p["mlp"]["w_down"], cdt).astype(x.dtype)
+        new_cache = new_kv
+    elif kind == "rec":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        rec_out, rec_state = rec_mod.recurrent_block(
+            p["rec"], h, compute_dtype=cdt, state=cache,
+        )
+        x = x + rec_out
+        if cfg.d_ff > 0:
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                           p["mlp"]["w_down"], cdt).astype(x.dtype)
+        new_cache = rec_state
+    elif kind == "mlstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        out, st = xlstm_mod.mlstm_block(
+            p["core"], h, heads=cfg.num_heads, compute_dtype=cdt, state=cache,
+            unroll=cfg.unroll_scans,
+        )
+        x = x + out
+        new_cache = st
+    elif kind == "slstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        out, st = xlstm_mod.slstm_block(
+            p["core"], h, heads=cfg.num_heads, compute_dtype=cdt, state=cache,
+        )
+        x = x + out
+        new_cache = st
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    x = _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Pattern iteration: scan over full periods, unroll the remainder
+# ---------------------------------------------------------------------------
+
+
+def _period_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...], dict]:
+    """(n_full_periods, period, per-type counts inside one period)."""
+    period = cfg.layer_pattern
+    n_full = cfg.num_layers // len(period)
+    per = {}
+    for k in period:
+        per[k] = per.get(k, 0) + 1
+    return n_full, period, per
+
+
+def _tree_slice(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, *, tp=1, rules=None,
+                   extra_embeds=None):
+    """Full-sequence forward to final hidden states (train / prefill body).
+
+    ``extra_embeds`` ([B, F, D]) replace the first F token positions (VLM
+    patch / audio frame stub inputs).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt) * math.sqrt(cfg.d_model)
+    if extra_embeds is not None:
+        F = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(cdt), x[:, F:]], axis=1)
+    x = _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+
+    n_full, period, per = _period_layout(cfg)
+    aux_total: dict[str, jax.Array] = {}
+
+    def block_with_remat(kind):
+        fn = lambda p, x: apply_block(  # noqa: E731
+            cfg, kind, p, x, positions, tp=tp, rules=rules
+        )
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=_remat_policy(cfg))
+        return fn
+
+    def period_body(carry, pslices):
+        x, aux_acc = carry
+        cursor = {k: 0 for k in per}
+        for kind in period:
+            p = _tree_slice(pslices[kind], cursor[kind])
+            cursor[kind] += 1
+            x, _c, aux = block_with_remat(kind)(p, x)
+            for k2, v2 in aux.items():
+                aux_acc = {**aux_acc, k2: aux_acc.get(k2, 0.0) + v2}
+        return (x, aux_acc), None
+
+    aux0 = {k: jnp.zeros((), jnp.float32)
+            for k in ("moe_lb_loss", "moe_z_loss", "moe_drop_fraction")} \
+        if "moe" in per else {}
+
+    if cfg.scan_layers and n_full > 1:
+        period_stacks = {
+            kind: jax.tree.map(
+                lambda a: a[: n_full * per[kind]].reshape(
+                    (n_full, per[kind]) + a.shape[1:]
+                ),
+                params["blocks"][kind],
+            )
+            for kind in per
+        }
+        (x, aux_total), _ = jax.lax.scan(
+            period_body, (x, aux0), period_stacks
+        )
+    else:
+        cursor = {k: 0 for k in per}
+        aux_total = dict(aux0)
+        for _ in range(n_full):
+            for kind in period:
+                p = _tree_slice(params["blocks"][kind], cursor[kind])
+                cursor[kind] += 1
+                x, _c, aux = block_with_remat(kind)(p, x)
+                for k2, v2 in aux.items():
+                    aux_total[k2] = aux_total.get(k2, 0.0) + v2
+
+    # Remainder layers (pattern prefix), always unrolled.
+    rem = cfg.num_layers - n_full * len(period)
+    if rem:
+        cursor2 = {k: n_full * per.get(k, 0) for k in params["blocks"]}
+        for kind in period[:rem]:
+            p = _tree_slice(params["blocks"][kind], cursor2[kind])
+            cursor2[kind] += 1
+            x, _c, aux = block_with_remat(kind)(p, x)
+            for k2, v2 in aux.items():
+                aux_total[k2] = aux_total.get(k2, 0.0) + v2
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_head_weight(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, tp=1, rules=None):
+    """Mean CE over next-token targets + MoE aux losses."""
+    x, aux = forward_hidden(
+        cfg, params, batch["tokens"], tp=tp, rules=rules,
+        extra_embeds=batch.get("extra_embeds"),
+    )
+    ce = chunked_cross_entropy(
+        x, lm_head_weight(cfg, params), batch["targets"],
+        vocab_size=cfg.vocab_size, seq_chunk=cfg.loss_seq_chunk,
+        softcap=cfg.logit_softcap,
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+        unroll=cfg.unroll_scans,
+    )
+    loss = ce
+    metrics = {"ce_loss": ce}
+    if "moe_lb_loss" in aux:
+        loss = loss + 0.01 * aux["moe_lb_loss"] + 0.001 * aux["moe_z_loss"]
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def logits_from_hidden(cfg, params, x):
+    return lm_logits(x, lm_head_weight(cfg, params),
+                     jnp.dtype(cfg.compute_dtype), cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / state decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1,
+               dtype=None) -> dict:
+    """Allocation-free cache description: leaf -> (shape, dtype, logical
+    axes, fill value).  Single source of truth for ``init_cache`` and the
+    dry-run structs (which must NEVER materialise multi-TB caches)."""
+    if dtype is None:
+        dtype = jnp.dtype(cfg.compute_dtype)
+    hp = head_plan(cfg, tp)
+    width = cfg.rnn_width or cfg.d_model
+    xw = cfg.num_heads * cfg.head_dim  # xlstm inner width
+    hd = xw // cfg.num_heads
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    spec: dict[str, Any] = {}
+    for kind, n in cfg.layer_counts().items():
+        if kind in ATTN_KINDS:
+            # ``local`` layers ring-buffer exactly ``window`` slots: every
+            # resident token is then within the window of the current query
+            # and no window mask is needed (keys carry true-position RoPE).
+            seq = max_seq if kind != "local" else min(max_seq, cfg.window_size)
+            shp = (n, batch, seq, hp["Kp"], cfg.head_dim)
+            spec[kind] = {"k": (shp, dtype, kv_axes, 0.0),
+                          "v": (shp, dtype, kv_axes, 0.0)}
+        elif kind == "rec":
+            spec[kind] = {
+                "h": ((n, batch, width), jnp.float32,
+                      ("layers", "batch", "rnn_state"), 0.0),
+                "conv": ((n, batch, cfg.conv1d_width - 1, width), dtype,
+                         ("layers", "batch", None, "rnn_state"), 0.0),
+            }
+        elif kind == "mlstm":
+            spec[kind] = {
+                "conv": ((n, batch, 3, xw), dtype,
+                         ("layers", "batch", None, "rnn_state"), 0.0),
+                "C": ((n, batch, cfg.num_heads, hd, hd), jnp.float32,
+                      ("layers", "batch", "heads", None, None), 0.0),
+                "n": ((n, batch, cfg.num_heads, hd), jnp.float32,
+                      ("layers", "batch", "heads", None), 0.0),
+                "m": ((n, batch, cfg.num_heads), jnp.float32,
+                      ("layers", "batch", "heads"), -1e30),
+            }
+        elif kind == "slstm":
+            st = ((n, batch, cfg.num_heads, hd), jnp.float32,
+                  ("layers", "batch", "heads", None))
+            spec[kind] = {"c": st + (0.0,), "n": st + (1.0,),
+                          "m": st + (0.0,), "h": st + (0.0,)}
+    return spec
+
+
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 4 and isinstance(x[0], tuple)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1,
+               dtype=None) -> dict:
+    """Decode state per layer type, stacked over that type's layer count."""
+    spec = cache_spec(cfg, batch, max_seq, tp, dtype)
+    return jax.tree.map(
+        lambda s: jnp.full(s[0], s[3], s[1]), spec, is_leaf=_is_spec_leaf
+    )
+
+
+def _cache_kind_state(cache_slice, kind):
+    if cache_slice is None:
+        return None
+    if kind in ATTN_KINDS:
+        return cache_slice
+    if kind == "rec":
+        return {"h": cache_slice["h"], "conv": cache_slice["conv"]}
+    if kind == "mlstm":
+        return (cache_slice["conv"],
+                (cache_slice["C"], cache_slice["n"], cache_slice["m"]))
+    if kind == "slstm":
+        return (cache_slice["c"], cache_slice["n"], cache_slice["m"],
+                cache_slice["h"])
+    raise ValueError(kind)
+
+
+def _state_to_cache(state, kind):
+    if kind in ATTN_KINDS:
+        return state
+    if kind == "rec":
+        return {"h": state["h"], "conv": state["conv"]}
+    if kind == "mlstm":
+        conv, (C, n, m) = state
+        return {"conv": conv, "C": C, "n": n, "m": m}
+    if kind == "slstm":
+        c, n, m, h = state
+        return {"c": c, "n": n, "m": m, "h": h}
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_len,
+                *, tp=1, rules=None):
+    """One decode step. tokens: [B, 1]; cache_len: scalar int32 (tokens
+    already in the cache).  Returns (logits [B, 1, Vp], new_cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt) * math.sqrt(cfg.d_model)
+    x = _constrain(rules, x, ("batch", "seq_sp", "d_model"))
+    if jnp.ndim(cache_len) == 0:
+        positions = jnp.reshape(cache_len, (1,)) + jnp.arange(1)
+    else:
+        positions = cache_len[:, None]  # [B, 1] per-slot positions
+
+    n_full, period, per = _period_layout(cfg)
+
+    def run_layer(kind, p, cslice, x):
+        state = _cache_kind_state(cslice, kind)
+        x, st, _aux = apply_block(
+            cfg, kind, p, x, positions, tp=tp, rules=rules,
+            cache=state, cache_len=cache_len,
+        )
+        return x, _state_to_cache(st, kind)
+
+    if cfg.scan_layers and n_full > 1:
+        # Scan over full periods: the per-layer cache slices travel as scan
+        # xs and the updated slices return as ys (compact HLO — no
+        # whole-stack copies per layer).
+        def reshape_periods(tree, count):
+            return jax.tree.map(
+                lambda a: a[: n_full * count].reshape(
+                    (n_full, count) + a.shape[1:]),
+                tree,
+            )
+
+        param_stacks = {k: reshape_periods(params["blocks"][k], per[k])
+                        for k in per}
+        cache_stacks = {k: reshape_periods(cache[k], per[k]) for k in per}
+
+        def period_body(x, inp):
+            pslices, cslices = inp
+            cursor = {k: 0 for k in per}
+            upd: dict[str, list] = {k: [] for k in per}
+            for kind in period:
+                i = cursor[kind]
+                cursor[kind] += 1
+                x, new_slice = run_layer(
+                    kind, _tree_slice(pslices[kind], i),
+                    _tree_slice(cslices[kind], i), x,
+                )
+                upd[kind].append(new_slice)
+            stacked = {
+                k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                for k, v in upd.items()
+            }
+            # preserve cache dtypes
+            stacked = {
+                k: jax.tree.map(lambda n, o: n.astype(o.dtype), stacked[k],
+                                _tree_slice(cslices[k], slice(None)))
+                for k in stacked
+            }
+            return x, stacked
+
+        x, scanned = jax.lax.scan(period_body, x, (param_stacks, cache_stacks))
+        new_cache = {
+            k: jax.tree.map(
+                lambda a: a.reshape((n_full * per[k],) + a.shape[2:]),
+                scanned[k],
+            )
+            for k in per
+        }
+        rem = cfg.num_layers - n_full * len(period)
+        if rem:
+            cursor2 = {k: n_full * per.get(k, 0) for k in cache}
+            # append remainder slices (unrolled)
+            tails: dict[str, list] = {k: [] for k in period[:rem]}
+            for kind in period[:rem]:
+                i = cursor2[kind]
+                cursor2[kind] += 1
+                x, new_slice = run_layer(
+                    kind, _tree_slice(params["blocks"][kind], i),
+                    _tree_slice(cache[kind], i), x,
+                )
+                tails[kind].append(new_slice)
+            for kind, slices in tails.items():
+                tail = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+                new_cache[kind] = jax.tree.map(
+                    lambda a, t: jnp.concatenate(
+                        [a, t.astype(a.dtype)], axis=0),
+                    new_cache[kind], tail,
+                )
+    else:
+        new_cache = {k: dict(v) for k, v in cache.items()}
+        counters = {k: 0 for k in cfg.layer_counts()}
+        for kind in cfg.pattern_for_layers:
+            i = counters[kind]
+            counters[kind] += 1
+            x, upd = run_layer(
+                kind, _tree_slice(params["blocks"][kind], i),
+                _tree_slice(cache[kind], i), x,
+            )
+            for leaf_key, leaf_val in upd.items():
+                new_cache[kind][leaf_key] = new_cache[kind][leaf_key].at[i].set(
+                    leaf_val.astype(new_cache[kind][leaf_key].dtype)
+                )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq, *, tp=1, rules=None):
+    """Run the full prompt, returning (last-token logits, filled cache).
+
+    Every block returns its terminal state (``return_state=True``): K/V for
+    attention kinds (written ring-consistently for ``local``), recurrent
+    state for rec/mlstm/slstm.  Used by the serving engine; the dry-run
+    lowers ``prefill_32k`` through the full forward instead.
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq, tp)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt) * math.sqrt(cfg.d_model)
+    positions = jnp.arange(S)
+    counters = {k: 0 for k in cfg.layer_counts()}
+    for kind in cfg.pattern_for_layers:
+        i = counters[kind]
+        counters[kind] += 1
+        p = _tree_slice(params["blocks"][kind], i)
+        x, st, _aux = apply_block(cfg, kind, p, x, positions,
+                                  tp=tp, rules=rules, return_state=True)
+        if kind in ATTN_KINDS:
+            kk = cache[kind]["k"]
+            size = kk.shape[2]
+            nfit = min(S, size)
+            tail_pos = jnp.arange(S - nfit, S)
+            slots = jnp.mod(tail_pos, size) if kind == "local" else tail_pos
+            cache[kind]["k"] = kk.at[i, :, slots].set(
+                jnp.moveaxis(st["k"][:, -nfit:], 1, 0).astype(kk.dtype))
+            cache[kind]["v"] = cache[kind]["v"].at[i, :, slots].set(
+                jnp.moveaxis(st["v"][:, -nfit:], 1, 0).astype(kk.dtype))
+        else:
+            upd = _state_to_cache(st, kind)
+            for leaf_key, leaf_val in upd.items():
+                cache[kind][leaf_key] = cache[kind][leaf_key].at[i].set(
+                    leaf_val.astype(cache[kind][leaf_key].dtype))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1:])
+    return logits, cache

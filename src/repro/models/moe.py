@@ -1,0 +1,184 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (EP over the model axis).
+
+Routing: top-k (llama4: k=1 + shared expert; olmoe: k=8).  Dispatch is the
+TPU-native scatter/gather pattern:
+
+  1. router logits -> top-k (expert id, prob) per token;
+  2. position-in-expert via a cumulative-sum over the one-hot choice
+     (GShard); tokens beyond ``capacity = cf * T * k / E`` are dropped to
+     the residual path;
+  3. ``scatter`` token activations into a dense [E, C, D] buffer — experts
+     are sharded over the *model* mesh axis, activations are replicated on
+     it, so the scatter is local to each shard (no all-to-all on the XLA
+     path; an all-to-all variant is a hillclimb option);
+  4. batched expert SwiGLU via einsum over the stacked [E, D, F] weights;
+  5. gather back, scale by router prob, sum over k slots.
+
+Aux losses: Switch load-balance loss + router z-loss, returned to the caller
+(weighted into the training objective).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, fan_in_normal
+
+
+def moe_param_specs(layers: int, d: int, f_expert: int, n_experts: int,
+                    n_shared: int, d_shared_ff: int) -> dict:
+    specs = {
+        "router": ParamSpec(
+            (layers, d, n_experts), ("layers", "d_model_fsdp", "experts"),
+            stddev=fan_in_normal((d, n_experts)),
+        ),
+        "w_gate": ParamSpec(
+            (layers, n_experts, d, f_expert),
+            ("layers", "experts", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, f_expert)),
+        ),
+        "w_up": ParamSpec(
+            (layers, n_experts, d, f_expert),
+            ("layers", "experts", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, f_expert)),
+        ),
+        "w_down": ParamSpec(
+            (layers, n_experts, f_expert, d),
+            ("layers", "experts", "d_ff", "d_model_fsdp"),
+            stddev=fan_in_normal((f_expert, d)),
+        ),
+    }
+    if n_shared > 0:
+        specs["shared_w_gate"] = ParamSpec(
+            (layers, d, d_shared_ff), ("layers", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, d_shared_ff)),
+        )
+        specs["shared_w_up"] = ParamSpec(
+            (layers, d, d_shared_ff), ("layers", "d_model_fsdp", "d_ff"),
+            stddev=fan_in_normal((d, d_shared_ff)),
+        )
+        specs["shared_w_down"] = ParamSpec(
+            (layers, d_shared_ff, d), ("layers", "d_ff", "d_model_fsdp"),
+            stddev=fan_in_normal((d_shared_ff, d)),
+        )
+    return specs
+
+
+def position_in_expert_onehot(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """GShard-literal positions: cumsum over a [T*k, E] one-hot.
+
+    O(T*k*E) memory — the dominant HBM term for large-E MoE (olmoe:
+    134 GB/device at train_4k).  Kept as the paper-era baseline."""
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.sum(pos_in_e * onehot, axis=-1)
+
+
+def position_in_expert_sort(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """Sort-based positions: O(T*k) memory, identical assignment.
+
+    Stable argsort groups slots by expert while preserving token order, so
+    position-in-expert = rank-within-sorted-run — exactly the one-hot
+    cumsum's token-order positions (verified by property test)."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(n) - starts[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_ffn(
+    x: jax.Array,
+    params: dict,
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    compute_dtype=jnp.bfloat16,
+    dispatch: str = "onehot",  # "onehot" (GShard baseline) | "sort" (O(S*k))
+) -> tuple[jax.Array, dict]:
+    """x: [B, S, D] -> (out [B, S, D], aux metrics/losses).
+
+    **Grouped dispatch** (GShard "groups" = the data-sharded batch rows):
+    routing positions, the [E, C, D] scatter and the gather-back are all
+    computed *per batch row* (vmap over B), so under data parallelism every
+    shard dispatches only its local tokens — no global sort/cumsum, no
+    cross-shard token movement on the XLA path.  The dispatch buffer is
+    [B, E, C, D] with B on the data axis and E on the model axis (EP).
+
+    ``params`` holds per-layer slices: router [D, E], w_gate/w_up [E, D, F],
+    w_down [E, F, D] (+ optional shared_* dense weights).
+    """
+    B, S, D = x.shape
+    E = num_experts
+    capacity = max(int(capacity_factor * S * top_k / E), 1)
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32),
+        params["router"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)  # [B, S, E]
+    top_p, top_e = jax.lax.top_k(probs, top_k)  # [B, S, k]
+    # Normalise the selected probabilities (Mixtral/OLMoE convention).
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(B, S * top_k)
+    pos_fn = (position_in_expert_sort if dispatch == "sort"
+              else position_in_expert_onehot)
+    pos = jax.vmap(lambda fe: pos_fn(fe, E))(flat_e)  # [B, S*k]
+    keep = pos < capacity
+    drop_fraction = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    safe_pos = jnp.where(keep, pos, capacity)
+    token_idx = jnp.repeat(jnp.arange(S), top_k)
+
+    def disp(xg, fe, sp):
+        buf = jnp.zeros((E, capacity + 1, D), compute_dtype)
+        buf = buf.at[fe, sp].set(xg[token_idx].astype(compute_dtype))
+        return buf[:, :capacity]
+
+    buf = jax.vmap(disp)(x, flat_e, safe_pos)  # [B, E, C, D]
+
+    # Batched expert SwiGLU (E sharded over the model axis: EP).
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("becf,efd->becd", h,
+                         params["w_down"].astype(compute_dtype))
+
+    # Gather back per group and combine over the k slots.
+    def undisp(ob, fe, sp):
+        return ob[fe, jnp.minimum(sp, capacity - 1)]  # [S*k, D]
+
+    gathered = jax.vmap(undisp)(out_buf, flat_e, safe_pos)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    weighted = gathered.astype(jnp.float32) * top_p.reshape(B, S * top_k, 1)
+    out = jnp.sum(weighted.reshape(B, S, top_k, D), axis=2)
+
+    if "shared_w_gate" in params:
+        sg = jnp.einsum("bsd,df->bsf", x.astype(compute_dtype),
+                        params["shared_w_gate"].astype(compute_dtype))
+        su = jnp.einsum("bsd,df->bsf", x.astype(compute_dtype),
+                        params["shared_w_up"].astype(compute_dtype))
+        sh = jax.nn.silu(sg) * su
+        out = out + jnp.einsum(
+            "bsf,fd->bsd", sh, params["shared_w_down"].astype(compute_dtype)
+        ).astype(jnp.float32)
+
+    # -- aux losses ----------------------------------------------------------
+    # Switch load-balance: E * sum_e f_e * P_e (f = fraction of tokens
+    # dispatched to e, P = mean router prob for e).
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(dispatch_frac * mean_prob)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(router_logits, axis=-1) ** 2)
+
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_drop_fraction": drop_fraction,
+    }
+    return out.astype(x.dtype), aux

@@ -1,0 +1,142 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+The recurrence (per channel) is
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t + b_a))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+with an input gate ``i_t = sigmoid(W_x x_t + b_x)``.  Training uses an
+*associative scan* over the sequence (log-depth on TPU); decoding steps the
+recurrence with O(1) state — which is why recurrentgemma runs the
+``long_500k`` shape that dense-attention archs skip.
+
+Block structure (Griffin "recurrent block"): two branches from the residual
+stream — (linear -> GeLU) gate branch and (linear -> temporal conv1d ->
+RG-LRU) recurrent branch — merged by elementwise product and projected back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, fan_in_normal
+
+_C = 8.0  # Griffin's fixed constant c
+
+
+def rglru_param_specs(layers: int, width: int) -> dict:
+    return {
+        "lambda": ParamSpec((layers, width), ("layers", "rnn_state"),
+                            init="rglru_lambda"),
+        "w_a": ParamSpec((layers, width), ("layers", "rnn_state"),
+                         init="normal", stddev=fan_in_normal((width, width))),
+        "b_a": ParamSpec((layers, width), ("layers", "rnn_state"), init="zeros"),
+        "w_x": ParamSpec((layers, width), ("layers", "rnn_state"),
+                         init="normal", stddev=fan_in_normal((width, width))),
+        "b_x": ParamSpec((layers, width), ("layers", "rnn_state"), init="zeros"),
+    }
+
+
+def recurrent_block_specs(layers: int, d: int, width: int, conv_w: int) -> dict:
+    return {
+        "w_branch_x": ParamSpec((layers, d, width),
+                                ("layers", "d_model_fsdp", "rnn_state"),
+                                stddev=fan_in_normal((d, width))),
+        "w_branch_gate": ParamSpec((layers, d, width),
+                                   ("layers", "d_model_fsdp", "rnn_state"),
+                                   stddev=fan_in_normal((d, width))),
+        "conv1d": ParamSpec((layers, conv_w, width),
+                            ("layers", None, "rnn_state"), stddev=0.02),
+        "w_out": ParamSpec((layers, width, d),
+                           ("layers", "rnn_state", "d_model_fsdp"),
+                           stddev=fan_in_normal((width, d))),
+        "rglru": rglru_param_specs(layers, width),
+    }
+
+
+def _gates(params: dict, x: jax.Array):
+    """Per-timestep gate values. x: [B, S, W] (bf16 ok, gates in f32)."""
+    xf = x.astype(jnp.float32)
+    log_a_scale = -_C * jax.nn.softplus(params["lambda"].astype(jnp.float32))
+    r = jax.nn.sigmoid(xf * params["w_a"].astype(jnp.float32) + params["b_a"].astype(jnp.float32))
+    log_a = log_a_scale * r  # [B, S, W], <= 0
+    a = jnp.exp(log_a)
+    gated_x = xf * jax.nn.sigmoid(
+        xf * params["w_x"].astype(jnp.float32) + params["b_x"].astype(jnp.float32)
+    )
+    # sqrt(1 - a^2) computed stably via expm1: 1 - exp(2 log a).
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a) + 1e-12)
+    return a, beta * gated_x
+
+
+def rglru_scan(params: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Associative-scan RG-LRU. x: [B, S, W] -> (y [B, S, W], h_last)."""
+    a, bx = _gates(params, x)
+    if h0 is not None:
+        # Fold the carried state into the first step: h_1 = a_1 h_0 + bx_1.
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    del a_c
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params: dict, x_t: jax.Array, h: jax.Array):
+    """Single decode step. x_t: [B, W]; h: [B, W] -> (y_t, h')."""
+    a, bx = _gates(params, x_t[:, None])
+    h_new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+def causal_conv1d(w: jax.Array, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. w: [K, W]; x: [B, S, W]; state: [B, K-1, W]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, W]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1]].astype(jnp.float32) * w[k].astype(
+            jnp.float32
+        )
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def recurrent_block(
+    params: dict,
+    x: jax.Array,
+    *,
+    compute_dtype=jnp.bfloat16,
+    state: dict | None = None,
+):
+    """Griffin recurrent block.  x: [B, S, D].
+
+    ``state`` (decode): {"h": [B, W], "conv": [B, K-1, W]}.  Returns
+    (out [B, S, D], new_state | None).
+    """
+    xc = x.astype(compute_dtype)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", xc, params["w_branch_gate"].astype(compute_dtype))
+    )
+    u = jnp.einsum("bsd,dw->bsw", xc, params["w_branch_x"].astype(compute_dtype))
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv1d(params["conv1d"], u, conv_state)
+    if state is not None:
+        y, h_new = rglru_step(params["rglru"], u[:, 0], state["h"])
+        y = y[:, None]
+    else:
+        y, h_new = rglru_scan(params["rglru"], u)
+    merged = y * gate
+    out = jnp.einsum("bsw,wd->bsd", merged.astype(compute_dtype),
+                     params["w_out"].astype(compute_dtype))
+    new_state = {"h": h_new, "conv": new_conv}
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,329 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory with memory mixing, sequential scan).
+
+mLSTM recurrence per head (head dim ``d``)::
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T          (matrix memory, d x d)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+with exponential input gate ``i = exp(itilde)``, forget gate
+``f = sigmoid/exp`` and the max-stabiliser ``m_t``.  Training uses the
+**chunkwise-parallel** form (intra-chunk quadratic + inter-chunk state),
+the TPU-native formulation (same family as GLA/Mamba-2 SSD); decoding steps
+the recurrence with O(1) state — hence xlstm runs ``long_500k``.
+
+A step-by-step sequential reference (``mlstm_sequential``) is kept as the
+oracle for the chunkwise implementation and the decode path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, fan_in_normal
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core
+# ---------------------------------------------------------------------------
+
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, initial=None):
+    """Oracle: step the recurrence. q/k/v: [B, S, H, D]; gates: [B, S, H].
+
+    Returns (h [B, S, H, D], state (C, n, m)).
+    """
+    B, S, H, D = q.shape
+    k = k / math.sqrt(D)
+    if initial is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+
+    def step(carry, t):
+        C, n, m = carry
+        qt = q[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        it = i_raw[:, t].astype(jnp.float32)
+        ft = logf[:, t]
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 1)  # [B, S, H, D]
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, chunk: int = 64, initial=None,
+                    unroll: bool = False):
+    """Chunkwise-parallel mLSTM. Same signature/semantics as the oracle."""
+    B, S, H, D = q.shape
+    if S % chunk != 0:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    NC = S // chunk
+    k = k / math.sqrt(D)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    ii = i_raw.astype(jnp.float32)
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    def reshape_c(x, extra=()):  # [B, S, ...] -> [NC, B, chunk, ...]
+        return jnp.moveaxis(x.reshape((B, NC, chunk) + extra), 1, 0)
+
+    qs = reshape_c(q.astype(jnp.float32), (H, D))
+    ks = reshape_c(k.astype(jnp.float32), (H, D))
+    vs = reshape_c(v.astype(jnp.float32), (H, D))
+    is_ = reshape_c(ii, (H,))
+    fs = reshape_c(logf, (H,))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry  # [B,H,D,D], [B,H,D], [B,H]
+        qc, kc, vc, ic, fc = inp  # [B, chunk, H, ...]
+        b = jnp.cumsum(fc, axis=1)  # [B, chunk, H] cumulative log-forget
+        # g_i = cummax_{j<=i} (itilde_j - b_j); local max for stabilisation.
+        g = jax.lax.cummax(ic - b, axis=1)
+        m_loc = b + jnp.maximum(m[:, None, :], g)  # m_i, [B, chunk, H]
+        # Intra-chunk decay matrix: D_ij = exp(b_i - b_j + i_j - m_i), j<=i.
+        logD = (
+            b[:, :, None, :] - b[:, None, :, :] + ic[:, None, :, :]
+            - m_loc[:, :, None, :]
+        )  # [B, i, j, H]
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        Dm = jnp.exp(logD)
+        scores = jnp.einsum("bihd,bjhd->bijh", qc, kc) * Dm
+        num_intra = jnp.einsum("bijh,bjhd->bihd", scores, vc)
+        # n contribution: sum_{j<=i} D_ij k_j
+        n_intra = jnp.einsum("bijh,bjhd->bihd", Dm, kc)
+        # Inter-chunk: decay from carried state.
+        inter_scale = jnp.exp(b + m[:, None, :] - m_loc)  # [B, chunk, H]
+        num_inter = jnp.einsum("bihe,bhde->bihd", qc, C) * inter_scale[..., None]
+        n_eff = n_intra + n[:, None, :, :] * inter_scale[..., None]
+        num = num_intra + num_inter
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bihd,bihd->bih", n_eff, qc)),
+            jnp.exp(-m_loc),
+        )
+        h = num / den[..., None]
+
+        # -- state update to end of chunk ------------------------------------
+        m_new = m_loc[:, -1, :]  # [B, H]
+        b_last = b[:, -1:, :]  # [B, 1, H]
+        w = jnp.exp(b_last - b + ic - m_new[:, None, :])  # [B, chunk, H]
+        C_new = C * jnp.exp(b_last[:, 0] + m - m_new)[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", w, vc, kc
+        )
+        n_new = n * jnp.exp(b_last[:, 0] + m - m_new)[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", w, kc
+        )
+        return (C_new, n_new, m_new), h
+
+    if unroll:
+        carry = (C0, n0, m0)
+        hs_list = []
+        for ci in range(NC):
+            carry, h_c = chunk_step(
+                carry, (qs[ci], ks[ci], vs[ci], is_[ci], fs[ci])
+            )
+            hs_list.append(h_c)
+        C, n, m = carry
+        hs = jnp.stack(hs_list)
+    else:
+        (C, n, m), hs = jax.lax.scan(
+            chunk_step, (C0, n0, m0), (qs, ks, vs, is_, fs)
+        )
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, D)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_step(q1, k1, v1, i1, f1, state):
+    """Single decode step: q1/k1/v1 [B, H, D]; gates [B, H]."""
+    h, new_state = mlstm_sequential(
+        q1[:, None], k1[:, None], v1[:, None], i1[:, None], f1[:, None],
+        initial=state,
+    )
+    return h[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core (sequential; scalar memory with per-head memory mixing)
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(x_gates, r_weights, initial=None):
+    """x_gates: dict of [B, S, H, D] pre-activations (i, f, z, o from the
+    input projections); r_weights: dict of [H, D, D] recurrent (per-head
+    block-diagonal) matrices.  Returns (h [B, S, H, D], state).
+    """
+    zi, fi, ii, oi = (x_gates[k] for k in ("z", "f", "i", "o"))
+    B, S, H, D = zi.shape
+    if initial is None:
+        c0 = jnp.zeros((B, H, D), jnp.float32)
+        n0 = jnp.ones((B, H, D), jnp.float32)
+        m0 = jnp.zeros((B, H, D), jnp.float32)
+        h0 = jnp.zeros((B, H, D), jnp.float32)
+    else:
+        c0, n0, m0, h0 = initial
+
+    def step(carry, t):
+        c, n, m, h = carry
+        rz = jnp.einsum("bhd,hde->bhe", h, r_weights["z"].astype(jnp.float32))
+        rf = jnp.einsum("bhd,hde->bhe", h, r_weights["f"].astype(jnp.float32))
+        ri = jnp.einsum("bhd,hde->bhe", h, r_weights["i"].astype(jnp.float32))
+        ro = jnp.einsum("bhd,hde->bhe", h, r_weights["o"].astype(jnp.float32))
+        z = jnp.tanh(zi[:, t].astype(jnp.float32) + rz)
+        f_raw = fi[:, t].astype(jnp.float32) + rf
+        i_raw = ii[:, t].astype(jnp.float32) + ri
+        o = jax.nn.sigmoid(oi[:, t].astype(jnp.float32) + ro)
+        logf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(logf + m, i_raw)
+        i_s = jnp.exp(i_raw - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.arange(S))
+    out = jnp.moveaxis(hs, 0, 1)  # [B, S, H, D]
+    return out.astype(zi.dtype), (c, n, m, h)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (projection structure around the cores)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_specs(layers: int, d: int, heads: int, head_dim: int) -> dict:
+    width = heads * head_dim
+    return {
+        "w_up": ParamSpec((layers, d, 2 * width), ("layers", "d_model_fsdp", "d_attn"),
+                          stddev=fan_in_normal((d, width))),
+        "conv1d": ParamSpec((layers, 4, width), ("layers", None, "d_attn"),
+                            stddev=0.02),
+        "w_q": ParamSpec((layers, width, width), ("layers", None, "d_attn"),
+                         stddev=fan_in_normal((width, width))),
+        "w_k": ParamSpec((layers, width, width), ("layers", None, "d_attn"),
+                         stddev=fan_in_normal((width, width))),
+        "w_v": ParamSpec((layers, width, width), ("layers", None, "d_attn"),
+                         stddev=fan_in_normal((width, width))),
+        "w_gates": ParamSpec((layers, width, 2 * heads), ("layers", "d_attn", None),
+                             stddev=fan_in_normal((width, heads))),
+        "norm": ParamSpec((layers, width), ("layers", "d_attn"), init="zeros"),
+        "w_down": ParamSpec((layers, width, d), ("layers", "d_attn", "d_model_fsdp"),
+                            stddev=fan_in_normal((width, d))),
+    }
+
+
+def slstm_block_specs(layers: int, d: int, heads: int, head_dim: int) -> dict:
+    width = heads * head_dim
+    return {
+        "w_in": ParamSpec((layers, d, 4 * width), ("layers", "d_model_fsdp", "d_attn"),
+                          stddev=fan_in_normal((d, width))),
+        "r": {
+            g: ParamSpec((layers, heads, head_dim, head_dim),
+                         ("layers", "heads", None, None),
+                         stddev=fan_in_normal((head_dim, head_dim)))
+            for g in ("z", "f", "i", "o")
+        },
+        "norm": ParamSpec((layers, width), ("layers", "d_attn"), init="zeros"),
+        "w_down": ParamSpec((layers, width, d), ("layers", "d_attn", "d_model_fsdp"),
+                            stddev=fan_in_normal((width, d))),
+    }
+
+
+def _group_rms(x, scale, heads, eps=1e-6):
+    """Per-head RMS norm over head_dim (GroupNorm analogue). x: [B,S,W]."""
+    B, S, W = x.shape
+    xh = x.reshape(B, S, heads, W // heads).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, W) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def mlstm_block(params, x, *, heads: int, chunk: int = 64,
+                compute_dtype=jnp.bfloat16, state=None, unroll: bool = False):
+    """x: [B, S, D] -> (out, new_state|None).  state: (conv, (C, n, m))."""
+    from repro.models.recurrent import causal_conv1d
+
+    B, S, D = x.shape
+    xc = x.astype(compute_dtype)
+    up = jnp.einsum("bsd,dw->bsw", xc, params["w_up"].astype(compute_dtype))
+    width = up.shape[-1] // 2
+    u, gate = up[..., :width], up[..., width:]
+    conv_state = state[0] if state is not None else None
+    uc, new_conv = causal_conv1d(params["conv1d"], u, conv_state)
+    uc = jax.nn.silu(uc)
+    hd = width // heads
+
+    def heads_of(w):
+        y = jnp.einsum("bsw,wu->bsu", uc, w.astype(compute_dtype))
+        return y.reshape(B, S, heads, hd)
+
+    q, k = heads_of(params["w_q"]), heads_of(params["w_k"])
+    v = jnp.einsum("bsw,wu->bsu", u, params["w_v"].astype(compute_dtype)).reshape(
+        B, S, heads, hd
+    )
+    gates = jnp.einsum("bsw,wg->bsg", uc, params["w_gates"].astype(compute_dtype))
+    i_raw, f_raw = gates[..., :heads], gates[..., heads:]
+    if state is not None:
+        h, new_core = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                 i_raw[:, 0], f_raw[:, 0], state[1])
+        h = h[:, None]
+    else:
+        h, new_core = mlstm_chunkwise(q, k, v, i_raw, f_raw,
+                                      chunk=min(chunk, S), unroll=unroll)
+    h = h.reshape(B, S, width)
+    h = _group_rms(h, params["norm"], heads)
+    h = h * jax.nn.silu(gate)
+    out = jnp.einsum("bsw,wd->bsd", h.astype(compute_dtype),
+                     params["w_down"].astype(compute_dtype))
+    return out.astype(x.dtype), (new_conv, new_core)
+
+
+def slstm_block(params, x, *, heads: int, compute_dtype=jnp.bfloat16, state=None):
+    """x: [B, S, D] -> (out, new_state|None).  state: (c, n, m, h)."""
+    B, S, D = x.shape
+    xc = x.astype(compute_dtype)
+    pre = jnp.einsum("bsd,dw->bsw", xc, params["w_in"].astype(compute_dtype))
+    width = pre.shape[-1] // 4
+    hd = width // heads
+
+    def split(idx):
+        g = pre[..., idx * width : (idx + 1) * width]
+        return g.reshape(B, S, heads, hd)
+
+    gates = {"z": split(0), "f": split(1), "i": split(2), "o": split(3)}
+    r = {k: params["r"][k] for k in ("z", "f", "i", "o")}
+    h, new_state_core = slstm_scan(gates, r, initial=state)
+    h = h.reshape(B, S, width)
+    h = _group_rms(h, params["norm"], heads)
+    out = jnp.einsum("bsw,wd->bsd", h.astype(compute_dtype),
+                     params["w_down"].astype(compute_dtype))
+    return out.astype(x.dtype), new_state_core

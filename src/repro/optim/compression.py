@@ -1,0 +1,110 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization).
+
+Two compressors, both with error feedback (the residual of the lossy cast is
+carried into the next step, preserving convergence — 1-bit Adam lineage):
+
+* ``bf16``  — cast fp32 grads to bfloat16 on the wire (2x);
+* ``int8``  — per-tensor-row affine int8 quantisation (4x).
+
+Used by the explicit-DP train-step variant (``runtime.steps`` with
+``compress_grads != none``): gradients are compressed before the data-axis
+``psum`` (inside ``shard_map``) and decompressed after, so the bytes crossing
+the slow pod links shrink by the stated factor.  The roofline collective
+term scales accordingly (hillclimb option for collective-bound cells).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    flat = x.reshape(x.shape[0] if x.ndim > 1 else 1, -1).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def compress(grads: Any, errors: Any, mode: str) -> tuple[Any, Any, Any]:
+    """Returns (wire_tree, decompress_meta, new_errors).
+
+    ``wire_tree`` is what travels through the collective; adding the carried
+    error before compression and storing the new residual after implements
+    error feedback.
+    """
+    if mode == "none":
+        return grads, None, errors
+
+    if mode == "bf16":
+        def leaf(g, e):
+            corrected = g.astype(jnp.float32) + e
+            wire = corrected.astype(jnp.bfloat16)
+            return wire, corrected - wire.astype(jnp.float32)
+
+        pairs = jax.tree.map(leaf, grads, errors)
+        wire = jax.tree.map(lambda pr: pr[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return wire, None, new_err
+
+    if mode == "int8":
+        def leaf(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = _quant_int8(corrected)
+            deq = _dequant_int8(q, scale, corrected.shape)
+            return (q, scale), corrected - deq
+
+        pairs = jax.tree.map(leaf, grads, errors)
+        wire = jax.tree.map(lambda pr: pr[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        shapes = jax.tree.map(lambda g: g.shape, grads)
+        return wire, shapes, new_err
+
+    raise ValueError(f"unknown compression mode {mode!r}")
+
+
+def decompress(wire: Any, meta: Any, mode: str) -> Any:
+    if mode == "none" or mode == "bf16":
+        return jax.tree.map(lambda w: w.astype(jnp.float32), wire) \
+            if mode == "bf16" else wire
+    if mode == "int8":
+        def leaf(pair, shape):
+            q, scale = pair
+            return _dequant_int8(q, scale, shape)
+
+        return jax.tree.map(
+            leaf, wire, meta, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    raise ValueError(f"unknown compression mode {mode!r}")
+
+
+def wire_bytes(tree: Any, mode: str) -> int:
+    """Bytes on the wire for one gradient exchange (reporting helper)."""
+    import math
+
+    def nbytes(x):
+        return math.prod(x.shape) * x.dtype.itemsize
+
+    if mode == "int8":
+        total = 0
+        for leaf in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, tuple)):
+            if isinstance(leaf, tuple):
+                total += sum(nbytes(x) for x in leaf)
+            else:
+                total += nbytes(leaf)
+        return total
+    return sum(nbytes(x) for x in jax.tree.leaves(tree))

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (warmup + cosine decay, the LM default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step,
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_fraction: float = 0.1,
+):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    progress = jnp.clip(
+        (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = final_fraction + (1 - final_fraction) * 0.5 * (
+        1 + jnp.cos(jnp.pi * progress)
+    )
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def constant(step, *, peak_lr: float, **_kw):
+    del step
+    return jnp.float32(peak_lr)

@@ -1,0 +1,75 @@
+"""Failure & straggler injection + detection.
+
+The container has one host, so failures are *injected* (the paper's cluster
+had real workstations; our substitute keeps the entire detect -> checkpoint
+-> re-mesh -> resume control path real and testable, with only the fault
+itself simulated).  Detection thresholds follow standard heartbeat/step-time
+practice.
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Literal
+
+FailureKind = Literal["crash", "node_loss", "straggler"]
+
+
+class SimulatedNodeFailure(RuntimeError):
+    def __init__(self, step: int, kind: FailureKind, node: int):
+        super().__init__(f"simulated {kind} of node {node} at step {step}")
+        self.step = step
+        self.kind = kind
+        self.node = node
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: FailureKind = "crash"
+    node: int = 0
+    # straggler: multiplicative slowdown applied to the injected node
+    slowdown: float = 4.0
+
+
+@dataclass
+class FailurePlan:
+    events: list[FailureEvent] = field(default_factory=list)
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> FailureEvent | None:
+        for ev in self.events:
+            if ev.step == step and id(ev) not in self._fired:
+                self._fired.add(id(ev))
+                return ev
+        return None
+
+
+@dataclass
+class StragglerMonitor:
+    """Step-time EMA + median straggler detection.
+
+    In SPMD every device runs in lockstep, so a straggling node slows the
+    *whole step* (the collectives wait).  Detection is therefore on the
+    global step time; mitigation is demand-driven re-dispatch at the data
+    layer where possible (the paper's client-server protocol, exercised by
+    the DSL runtime) or elastic exclusion of the slow node (executor path).
+    """
+
+    window: int = 32
+    threshold: float = 2.0
+    times: list[float] = field(default_factory=list)
+
+    def record(self, step_time_s: float) -> bool:
+        """Returns True when the last step looks straggler-afflicted."""
+        self.times.append(step_time_s)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) < 8:
+            return False
+        med = statistics.median(self.times[:-1])
+        return step_time_s > self.threshold * med
+
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0

@@ -1,0 +1,169 @@
+"""Executable emit/cluster/collect network (the paper's Figure 2), local mode.
+
+This is the runtime behind ``ClusterBuilder.build_application``: the wired
+process network running as threads with bounded rendezvous channels on one
+machine — precisely the paper's §6.1 *"operation and testing of a system can
+be conducted on a single host node before using multiple nodes"* mode.  The
+topology, the demand-driven client-server protocol (``onrl``/``nrfa``), the
+one-place buffer invariant and Universal-Terminator shutdown are the ones
+model-checked in ``core.verify``; this module is their operational twin.
+
+Worker functions are expected to be JAX/numpy computations: XLA releases the
+GIL during execution, so worker threads genuinely overlap (Table 1 of the
+paper is reproduced this way in ``benchmarks/``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.builder import DeploymentPlan
+from repro.core.dsl import ClusterSpec
+from repro.core.timing import TimingCollector
+
+
+class _UT:
+    """Universal Terminator (paper §4, Listing 3 {3:21})."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "UT"
+
+
+UT = _UT()
+
+
+@dataclass
+class LocalClusterApplication:
+    spec: ClusterSpec
+    plan: DeploymentPlan
+    timing: TimingCollector
+
+    result: Any = None
+    _ran: bool = False
+
+    def run(self) -> Any:
+        """Load the network, run to termination, return the finalised result."""
+        if self._ran:
+            raise RuntimeError("application already ran; build a fresh one")
+        self._ran = True
+        spec = self.spec
+        n, w = spec.nclusters, spec.workers_per_node
+
+        with self.timing.phase("host", "load"):
+            # -- channel construction (input ends before output ends, §6) --
+            emit_to_onrl: queue.Queue = queue.Queue(maxsize=1)  # a
+            request_q: queue.Queue = queue.Queue()  # b.* many-to-one
+            node_in = [queue.Queue(maxsize=1) for _ in range(n)]  # c.i
+            work_q = [queue.Queue(maxsize=1) for _ in range(n)]  # d.i (1-place)
+            afoc_q = [queue.Queue(maxsize=w) for _ in range(n)]  # e.i
+            afo_q: queue.Queue = queue.Queue()  # node merge -> afo
+            collect_q: queue.Queue = queue.Queue()  # f
+
+            threads: list[threading.Thread] = []
+
+            def _spawn(fn, *args, name: str) -> None:
+                t = threading.Thread(target=fn, args=args, name=name, daemon=True)
+                threads.append(t)
+
+            # ---- host: Emit ------------------------------------------------
+            def emit_proc() -> None:
+                details = spec.host_net.emit.e_details
+                state = details.initial_state()
+                while True:
+                    item, state = details.create(state)
+                    if item is None:  # normalTermination
+                        emit_to_onrl.put(UT)
+                        return
+                    emit_to_onrl.put(item)
+
+            # ---- host: onrl (server) ----------------------------------------
+            def onrl_proc() -> None:
+                while True:
+                    obj = emit_to_onrl.get()
+                    if obj is UT:
+                        # Server_End: answer each node's next request with UT.
+                        for _ in range(n):
+                            node = request_q.get()
+                            node_in[node].put(UT)
+                        return
+                    node = request_q.get()  # wait for a request from any node
+                    node_in[node].put(obj)  # answer it in finite time
+
+            # ---- per node: nrfa (client, one-place buffer) -------------------
+            def nrfa_proc(i: int) -> None:
+                with self.timing.phase(f"node{i}", "load"):
+                    pass  # channel ends created above; record the touchpoint
+                t0 = time.perf_counter()
+                while True:
+                    request_q.put(i)  # b!i.S — only after previous delivery
+                    obj = node_in[i].get()  # c?i.o
+                    if obj is UT:
+                        for _ in range(w):
+                            work_q[i].put(UT)
+                        break
+                    work_q[i].put(obj)  # d!i.o (blocks until a worker idles)
+                self.timing.add(f"node{i}", "run", (time.perf_counter() - t0) * 1e3)
+
+            # ---- per node: workers -------------------------------------------
+            def worker_proc(i: int, _wi: int) -> None:
+                fn = spec.node_net.group.function
+                while True:
+                    obj = work_q[i].get()
+                    if obj is UT:
+                        afoc_q[i].put(UT)
+                        return
+                    afoc_q[i].put(fn(obj))
+                    self.timing.count_item(f"node{i}")
+
+            # ---- per node: afoc (merge workers, net output) -------------------
+            def afoc_proc(i: int) -> None:
+                remaining = w
+                while remaining:
+                    obj = afoc_q[i].get()
+                    if obj is UT:
+                        remaining -= 1
+                        continue
+                    afo_q.put(obj)
+                afo_q.put(UT)  # single UT per node
+
+            # ---- host: afo + collect ------------------------------------------
+            def afo_proc() -> None:
+                remaining = n
+                while remaining:
+                    obj = afo_q.get()
+                    if obj is UT:
+                        remaining -= 1
+                        continue
+                    collect_q.put(obj)
+                collect_q.put(UT)
+
+            def collect_proc() -> None:
+                details = spec.host_net.collector.r_details
+                acc = details.init()
+                while True:
+                    obj = collect_q.get()
+                    if obj is UT:
+                        self.result = details.finalise(acc)
+                        return
+                    acc = details.collect(acc, obj)
+
+            _spawn(emit_proc, name="emit")
+            _spawn(onrl_proc, name="onrl")
+            for i in range(n):
+                _spawn(nrfa_proc, i, name=f"nrfa{i}")
+                for wi in range(w):
+                    _spawn(worker_proc, i, wi, name=f"worker{i}.{wi}")
+                _spawn(afoc_proc, i, name=f"afoc{i}")
+            _spawn(afo_proc, name="afo")
+            _spawn(collect_proc, name="collect")
+
+        with self.timing.phase("host", "run"):
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        return self.result

@@ -1,0 +1,208 @@
+"""Continuous-batching serving engine built on the paper's protocol.
+
+The mapping is direct (DESIGN.md section 2):
+
+    Emit      -> the request queue (`submit`)
+    onrl      -> the slot scheduler: it answers an idle slot's *request* with
+                 the next queued prompt (demand-driven; the server is never
+                 blocked by a busy slot — the paper's liveness invariant)
+    nrfa/work -> decode slots: a slot only requests new work after it has
+                 delivered its finished sequence (one-place buffer invariant)
+    afoc/afo  -> the completion merge
+    Collect   -> finished-sequence results (`collect`)
+    UT        -> `shutdown()`: drains slots, then the engine terminates
+
+``core.verify`` model-checks this exact network shape; the engine is its
+operational twin, as ``runtime.local`` is for batch pipelines.
+
+Decode is *batched across slots* (one jitted ``decode_step`` call per engine
+tick, per-slot cache lengths), which is the continuous-batching part: new
+requests join on any tick without waiting for others to finish.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.timing import TimingCollector
+from repro.models import lm as lm_mod
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: list[int]
+    prompt_len: int
+    latency_s: float
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        max_slots: int = 4,
+        max_seq: int = 256,
+        tp: int = 1,
+        rules=None,
+        eos_id: int | None = None,
+        greedy: bool = True,
+    ):
+        if cfg.encoder_layers:
+            raise NotImplementedError("serving engine targets decoder-only LMs")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.tp = tp
+        self.rules = rules
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.timing = TimingCollector()
+
+        with self.timing.phase("host", "load"):
+            self.cache = lm_mod.init_cache(cfg, max_slots, max_seq, tp)
+            self.lens = np.zeros(max_slots, np.int32)  # tokens in cache
+            self.remaining = np.zeros(max_slots, np.int32)
+            self.slot_rid = np.full(max_slots, -1, np.int64)
+            self.slot_tokens: list[list[int]] = [[] for _ in range(max_slots)]
+            self.slot_prompt_len = np.zeros(max_slots, np.int32)
+            self.slot_t0 = np.zeros(max_slots, np.float64)
+            self.last_token = np.zeros(max_slots, np.int32)
+
+            self.queue: deque[Request] = deque()  # Emit -> onrl
+            self.completions: list[Completion] = []  # Collect
+            self._shutdown = False
+
+            self._decode = jax.jit(
+                lambda params, cache, tokens, lens: lm_mod.decode_step(
+                    cfg, params, cache, tokens, lens, tp=tp, rules=rules
+                )
+            )
+
+    # -- Emit side -------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if self._shutdown:
+            raise RuntimeError("engine is shut down (UT already propagated)")
+        self.queue.append(request)
+
+    # -- onrl: answer idle slots' requests with queued work ---------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_rid[slot] >= 0 or not self.queue:
+                continue  # busy slot never blocks the server
+            req = self.queue.popleft()
+            prompt = req.prompt[: self.max_seq - req.max_new_tokens - 1]
+            # Prefill this slot (batch=1) and splice its state into the
+            # engine cache at the slot index.  The prefill logits give the
+            # FIRST generated token; subsequent ticks feed it back.
+            t0 = time.perf_counter()
+            logits, pref_cache = lm_mod.prefill(
+                self.cfg, self.params,
+                jnp.asarray(prompt, jnp.int32)[None], self.max_seq,
+                tp=self.tp, rules=self.rules,
+            )
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache, pref_cache,
+            )
+            first = int(jnp.argmax(logits[0, 0, : self.cfg.vocab_size]))
+            self.slot_rid[slot] = req.rid
+            self.slot_tokens[slot] = list(prompt) + [first]
+            self.slot_prompt_len[slot] = len(prompt)
+            self.lens[slot] = len(prompt)
+            self.remaining[slot] = req.max_new_tokens - 1
+            self.last_token[slot] = first
+            self.slot_t0[slot] = t0
+            self.timing.count_item(f"slot{slot}")
+            if self.remaining[slot] <= 0 or (
+                self.eos_id is not None and first == self.eos_id
+            ):
+                self._complete(slot)
+
+    # -- decode tick -------------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick.  Returns the number of active slots."""
+        self._admit()
+        active = self.slot_rid >= 0
+        if not active.any():
+            return 0
+        t0 = time.perf_counter()
+        # Note: idle slots decode garbage in lockstep (masked out below) —
+        # the SPMD price for batched decode; their cache writes land at
+        # their stale lens and are overwritten on admission (prefill).
+        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        lens = jnp.asarray(self.lens, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens, lens)
+        next_tokens = np.asarray(
+            jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1)
+        )
+        self.timing.add("host", "run", (time.perf_counter() - t0) * 1e3)
+
+        for slot in range(self.max_slots):
+            if not active[slot]:
+                continue
+            tok = int(next_tokens[slot])
+            self.slot_tokens[slot].append(tok)
+            self.lens[slot] += 1  # last_token is now in the cache
+            self.remaining[slot] -= 1
+            self.last_token[slot] = tok
+            done = (
+                self.remaining[slot] <= 0
+                or (self.eos_id is not None and tok == self.eos_id)
+                or self.lens[slot] >= self.max_seq - 1
+            )
+            if done:
+                self._complete(slot)
+        return int(active.sum())
+
+    def _complete(self, slot: int) -> None:
+        """afoc/afo -> Collect; the slot goes idle and (demand-driven)
+        requests new work on the next tick."""
+        self.completions.append(
+            Completion(
+                rid=int(self.slot_rid[slot]),
+                tokens=list(self.slot_tokens[slot]),
+                prompt_len=int(self.slot_prompt_len[slot]),
+                latency_s=time.perf_counter() - self.slot_t0[slot],
+            )
+        )
+        self.slot_rid[slot] = -1
+        self.slot_tokens[slot] = []
+
+    # -- UT ------------------------------------------------------------------------
+
+    def shutdown(self) -> list[Completion]:
+        """Propagate the terminator: no new work, drain, return results."""
+        self._shutdown = True
+        guard = 0
+        while (self.slot_rid >= 0).any() or self.queue:
+            self.step()
+            guard += 1
+            if guard > 100000:  # pragma: no cover
+                raise RuntimeError("drain did not terminate")
+        return self.completions
+
+    def run_until_drained(self) -> list[Completion]:
+        while self.queue or (self.slot_rid >= 0).any():
+            self.step()
+        return self.completions

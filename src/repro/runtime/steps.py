@@ -1,0 +1,220 @@
+"""Step-function factories: the "cluster stage" bodies the builder deploys.
+
+Everything the dry-run, the trainer, the serving engine and the benchmarks
+lower comes from here, so every consumer sees the same semantics:
+
+* ``make_train_step``   — fwd + bwd + AdamW, donated state (train_4k);
+* ``make_prefill_step`` — full-sequence forward to last-token logits
+  (prefill_32k);
+* ``make_decode_step``  — one token against the KV/state cache
+  (decode_32k / long_500k);
+* ``*_structs``         — matching ShapeDtypeStruct inputs with shardings
+  derived by the builder rules (the dry-run's no-allocation inputs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.channels import ShardingRules
+from repro.data.pipeline import BATCH_AXES
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.common import param_shardings, param_structs
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+ENC_LEN_CAP = 4096  # encoder frames for decode shapes (source is bounded)
+
+
+def model_param_specs(cfg: ModelConfig, tp: int = 1):
+    if cfg.encoder_layers:
+        return encdec_mod.encdec_param_specs(cfg, tp)
+    return lm_mod.lm_param_specs(cfg, tp)
+
+
+def loss_fn_for(cfg: ModelConfig, tp: int, rules: ShardingRules | None):
+    if cfg.encoder_layers:
+        return lambda p, b: encdec_mod.encdec_loss(cfg, p, b, tp=tp, rules=rules)
+    return lambda p, b: lm_mod.lm_loss(cfg, p, b, tp=tp, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    tp: int = 1,
+    rules: ShardingRules | None = None,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+) -> Callable:
+    loss_fn = loss_fn_for(cfg, tp, rules)
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        lr = warmup_cosine(step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+                           total_steps=total_steps)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, lr
+        )
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_state_structs(cfg: ModelConfig, rules: ShardingRules, tp: int,
+                        opt_cfg: adamw.AdamWConfig):
+    """(param structs, opt-state structs) for dry-run lowering."""
+    specs = model_param_specs(cfg, tp)
+    p_structs = param_structs(specs, rules, dtype=jnp.dtype(cfg.param_dtype))
+    sdt = jnp.dtype(opt_cfg.state_dtype)
+    moments = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, sdt, sharding=s.sharding),
+        p_structs,
+    )
+    opt_structs = {
+        "m": moments,
+        "v": moments,
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return p_structs, opt_structs
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=rules.sharding((B, S), BATCH_AXES["tokens"])
+        ),
+        "targets": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=rules.sharding((B, S), BATCH_AXES["targets"])
+        ),
+    }
+    if cfg.encoder_layers:
+        shp = (B, S, cfg.d_model)
+        out["frames"] = jax.ShapeDtypeStruct(
+            shp, jnp.bfloat16, sharding=rules.sharding(shp, BATCH_AXES["frames"])
+        )
+        del out["tokens"]
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=rules.sharding((B, S), BATCH_AXES["tokens"])
+        )
+    elif cfg.frontend:
+        shp = (B, cfg.frontend_len, cfg.d_model)
+        out["extra_embeds"] = jax.ShapeDtypeStruct(
+            shp, jnp.bfloat16,
+            sharding=rules.sharding(shp, BATCH_AXES["extra_embeds"]),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full-sequence forward, last-token logits)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, *, tp: int = 1,
+                      rules: ShardingRules | None = None) -> Callable:
+    if cfg.encoder_layers:
+        def prefill_step(params, batch):
+            enc_out = encdec_mod.encode(cfg, params, batch["frames"],
+                                        tp=tp, rules=rules)
+            x = encdec_mod.decode_train(cfg, params, batch["tokens"], enc_out,
+                                        tp=tp, rules=rules)
+            cdt = jnp.dtype(cfg.compute_dtype)
+            return jnp.einsum("bd,dv->bv", x[:, -1].astype(cdt),
+                              params["lm_head"].astype(cdt))
+    else:
+        def prefill_step(params, batch):
+            x, _aux = lm_mod.forward_hidden(
+                cfg, params, batch["tokens"], tp=tp, rules=rules,
+                extra_embeds=batch.get("extra_embeds"),
+            )
+            return lm_mod.logits_from_hidden(cfg, params, x[:, -1:])[:, 0]
+
+    return prefill_step
+
+
+def prefill_batch_structs(cfg: ModelConfig, shape: ShapeConfig,
+                          rules: ShardingRules):
+    structs = batch_structs(cfg, shape, rules)
+    structs.pop("targets", None)
+    return structs
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token vs cache)
+# ---------------------------------------------------------------------------
+
+
+def make_decode_step(cfg: ModelConfig, *, tp: int = 1,
+                     rules: ShardingRules | None = None) -> Callable:
+    if cfg.encoder_layers:
+        def decode_step(params, cache, tokens, cache_len):
+            return encdec_mod.encdec_decode_step(
+                cfg, params, cache, tokens, cache_len, tp=tp, rules=rules
+            )
+    else:
+        def decode_step(params, cache, tokens, cache_len):
+            return lm_mod.decode_step(
+                cfg, params, cache, tokens, cache_len, tp=tp, rules=rules
+            )
+
+    return decode_step
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+                  tp: int):
+    """ShapeDtypeStructs for the decode cache (no allocation)."""
+    B = shape.global_batch
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.encoder_layers:
+        hp = lm_mod.head_plan(cfg, tp)
+        nd, Kp, hd = cfg.num_layers, hp["Kp"], cfg.head_dim
+        enc_len = min(shape.seq_len, ENC_LEN_CAP)
+        shapes = {
+            "k": ((nd, B, shape.seq_len, Kp, hd),
+                  ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+            "v": ((nd, B, shape.seq_len, Kp, hd),
+                  ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+            "xk": ((nd, B, enc_len, Kp, hd),
+                   ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+            "xv": ((nd, B, enc_len, Kp, hd),
+                   ("layers", "batch", "kv_seq", "kv_heads", "head_dim")),
+        }
+        return {
+            k: jax.ShapeDtypeStruct(shp, dt, sharding=rules.sharding(shp, ax))
+            for k, (shp, ax) in shapes.items()
+        }
+    spec = lm_mod.cache_spec(cfg, B, shape.seq_len, tp, dtype=dt)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s[0], s[1], sharding=rules.sharding(s[0], s[2])
+        ),
+        spec,
+        is_leaf=lm_mod._is_spec_leaf,
+    )
+
+
+def decode_input_structs(cfg: ModelConfig, shape: ShapeConfig,
+                         rules: ShardingRules, tp: int):
+    B = shape.global_batch
+    tokens = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=rules.sharding((B, 1), ("batch", "seq"))
+    )
+    cache = cache_structs(cfg, shape, rules, tp)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, cache_len

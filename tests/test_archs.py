@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+config of the same family and runs one forward/train step on CPU, asserting
+output shapes and no NaNs; decoder archs additionally roundtrip
+prefill+decode against the full forward."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models import encdec, lm
+from repro.models.common import init_params
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import steps as steps_mod
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _smoke(name):
+    return dataclasses.replace(get_config(name).smoke(),
+                               compute_dtype="float32")
+
+
+def _batch(cfg, B=2, S=32):
+    rng = jax.random.PRNGKey(1)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(rng, (B, S, cfg.d_model))
+    elif cfg.frontend:
+        batch["extra_embeds"] = jax.random.normal(
+            rng, (B, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_runs_and_is_finite(name):
+    cfg = _smoke(name)
+    specs = steps_mod.model_param_specs(cfg, 1)
+    params = init_params(specs, jax.random.PRNGKey(0), jnp.float32)
+    opt_cfg = AdamWConfig()
+    from repro.optim import adamw
+
+    opt_state = adamw.init_state(params, opt_cfg)
+    step = steps_mod.make_train_step(cfg, opt_cfg, tp=1, rules=None,
+                                     warmup_steps=1, total_steps=4)
+    batch = _batch(cfg)
+    params, opt_state, metrics = step(params, opt_state, batch, jnp.int32(0))
+    assert jnp.isfinite(metrics["loss"]), name
+    assert 2.0 < float(metrics["ce_loss"]) < 12.0  # ~ln(vocab) at init
+    assert jnp.isfinite(metrics["grad_norm"])
+    # one more step: params actually changed
+    p0 = jax.tree.leaves(params)[0].copy()
+    params, opt_state, m2 = step(params, opt_state, batch, jnp.int32(1))
+    assert not jnp.allclose(jax.tree.leaves(params)[0], p0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes(name):
+    cfg = _smoke(name)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    specs = steps_mod.model_param_specs(cfg, 1)
+    params = init_params(specs, jax.random.PRNGKey(0), jnp.float32)
+    prefill = steps_mod.make_prefill_step(cfg, tp=1, rules=None)
+    logits = prefill(params, {k: v for k, v in batch.items() if k != "targets"})
+    assert logits.shape == (B, cfg.padded_vocab(1))
+    assert jnp.isfinite(logits).all(), name
+
+
+@pytest.mark.parametrize(
+    "name", [n for n in ARCH_NAMES if ARCHS[n].has_decoder
+             and not ARCHS[n].encoder_layers]
+)
+def test_decode_matches_forward(name):
+    cfg = _smoke(name)
+    B, S = 2, 33
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    specs = lm.lm_param_specs(cfg, 1)
+    params = init_params(specs, jax.random.PRNGKey(0), jnp.float32)
+    x, _ = lm.forward_hidden(cfg, params, toks)
+    full_logits = lm.logits_from_hidden(cfg, params, x)
+    lp, cache = lm.prefill(cfg, params, toks[:, : S - 1], max_seq=S + 8)
+    assert jnp.abs(lp[:, 0] - full_logits[:, S - 2]).max() < 2e-4, name
+    ld, _ = lm.decode_step(cfg, params, cache, toks[:, S - 1 : S],
+                           jnp.int32(S - 1))
+    assert jnp.abs(ld[:, 0] - full_logits[:, S - 1]).max() < 2e-4, name
+
+
+def test_encdec_decode_matches_forward():
+    cfg = _smoke("seamless-m4t-large-v2")
+    B, Se, Sd = 2, 16, 12
+    rng = jax.random.PRNGKey(3)
+    frames = jax.random.normal(rng, (B, Se, cfg.d_model))
+    toks = jax.random.randint(rng, (B, Sd), 0, cfg.vocab_size)
+    params = init_params(encdec.encdec_param_specs(cfg, 1),
+                         jax.random.PRNGKey(0), jnp.float32)
+    enc_out = encdec.encode(cfg, params, frames)
+    x = encdec.decode_train(cfg, params, toks, enc_out)
+    full_logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    cache = encdec.init_encdec_cache(cfg, params, enc_out, max_seq=Sd + 4)
+    for t in range(Sd):
+        logits, cache = encdec.encdec_decode_step(
+            cfg, params, cache, toks[:, t : t + 1], jnp.int32(t))
+    assert jnp.abs(logits[:, 0] - full_logits[:, Sd - 1]).max() < 2e-4
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_shape_assignments(name):
+    """Every arch declares its runnable shapes + documented skips = 4."""
+    cfg = ARCHS[name]
+    runnable = {s.name for s in cfg.shapes()}
+    skipped = {s for s, _why in cfg.skipped_shapes()}
+    assert runnable | skipped == {"train_4k", "prefill_32k", "decode_32k",
+                                  "long_500k"}
+    assert not (runnable & skipped)
+
+
+def test_full_cell_count():
+    from repro.configs.registry import all_cells
+
+    cells = all_cells()
+    assert len(cells) == 40
+    assert sum(1 for *_x, r in cells if r) == 33  # 7 documented long/decode skips
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_padding_preserves_outputs(tp):
+    """Head/vocab padding at TP>1 must not change logits (zero-padded)."""
+    cfg = dataclasses.replace(
+        _smoke("phi3-medium-14b"), num_heads=6, num_kv_heads=2,
+        vocab_size=250,
+    )
+    specs1 = lm.lm_param_specs(cfg, tp=1)
+    specsN = lm.lm_param_specs(cfg, tp=tp)
+    p1 = init_params(specs1, jax.random.PRNGKey(0), jnp.float32)
+    pN = init_params(specsN, jax.random.PRNGKey(0), jnp.float32)
+    hd = cfg.head_dim
+    H = cfg.num_heads
+    b1, bN = p1["blocks"]["attn"], dict(pN["blocks"]["attn"])
+    bN["ln1"], bN["ln2"], bN["mlp"] = b1["ln1"], b1["ln2"], b1["mlp"]
+    bN["wq"] = pN["blocks"]["attn"]["wq"].at[:, :, : H * hd].set(
+        b1["wq"]).at[:, :, H * hd:].set(0)
+    bN["wo"] = pN["blocks"]["attn"]["wo"].at[:, : H * hd].set(
+        b1["wo"]).at[:, H * hd:].set(0)
+    kvdim = b1["wk"].shape[-1]
+    bN["wk"] = pN["blocks"]["attn"]["wk"].at[:, :, :kvdim].set(
+        b1["wk"]).at[:, :, kvdim:].set(0)
+    bN["wv"] = pN["blocks"]["attn"]["wv"].at[:, :, :kvdim].set(
+        b1["wv"]).at[:, :, kvdim:].set(0)
+    pN = dict(pN)
+    pN["blocks"] = {"attn": bN}
+    pN["embed"] = pN["embed"].at[: cfg.vocab_size].set(p1["embed"]).at[
+        cfg.vocab_size:].set(0)
+    pN["lm_head"] = pN["lm_head"].at[:, : cfg.vocab_size].set(
+        p1["lm_head"]).at[:, cfg.vocab_size:].set(0)
+    pN["final_norm"] = p1["final_norm"]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 250)
+    x1, _ = lm.forward_hidden(cfg, p1, toks, tp=1)
+    l1 = lm.logits_from_hidden(cfg, p1, x1)
+    xN, _ = lm.forward_hidden(cfg, pN, toks, tp=tp)
+    lN = lm.logits_from_hidden(cfg, pN, xN)
+    assert jnp.abs(l1 - lN[..., :250]).max() < 2e-4

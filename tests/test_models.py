@@ -1,0 +1,265 @@
+"""Model-layer unit & property tests: attention equivalences, mLSTM
+chunkwise-vs-sequential, RG-LRU chaining, MoE routing invariants, chunked CE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention as am
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xm
+from repro.models.layers import chunked_cross_entropy
+from repro.models.recurrent import causal_conv1d, rglru_scan, rglru_step
+
+
+def keys(n, seed=0):
+    return [jax.random.fold_in(jax.random.PRNGKey(seed), i) for i in range(n)]
+
+
+# -- attention -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("q_chunk", [16, 64])
+def test_blockwise_equals_reference(window, q_chunk):
+    ks = keys(3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 16))
+    k = jax.random.normal(ks[1], (2, 128, 2, 16))
+    v = jax.random.normal(ks[2], (2, 128, 2, 16))
+    ref = am.attention_reference(q, k, v, causal=True, window=window)
+    blk = am.attention_blockwise(q, k, v, causal=True, window=window,
+                                 q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), atol=2e-6)
+    unr = am.attention_blockwise(q, k, v, causal=True, window=window,
+                                 q_chunk=q_chunk, unroll=True)
+    np.testing.assert_allclose(np.asarray(unr), np.asarray(ref), atol=2e-6)
+
+
+def test_decode_attention_per_slot_lengths():
+    """Continuous batching: per-batch cache_len masks independently."""
+    ks = keys(3)
+    B, S, H, D = 3, 32, 2, 8
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    ck = jax.random.normal(ks[1], (B, S, H, D))
+    cv = jax.random.normal(ks[2], (B, S, H, D))
+    lens = jnp.asarray([4, 17, 32])
+    out = am.decode_attention(q, ck, cv, lens)
+    for b, n in enumerate([4, 17, 32]):
+        ref = am.decode_attention(q[b : b + 1], ck[b : b + 1, :],
+                                  cv[b : b + 1, :], jnp.int32(n))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref[0]),
+                                   atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    ks = keys(2)
+    x = jax.random.normal(ks[0], (1, 64, 2, 32))
+    r = am.apply_rope(x, jnp.arange(64), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1), rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i - j
+    q = jax.random.normal(ks[1], (1, 1, 1, 32))
+    k = jax.random.normal(ks[0], (1, 1, 1, 32))
+    def dot(i, j):
+        qr = am.apply_rope(q, jnp.asarray([i]), 10000.0)
+        kr = am.apply_rope(k, jnp.asarray([j]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot(5, 3) - dot(12, 10)) < 1e-4
+
+
+# -- mLSTM / sLSTM ---------------------------------------------------------------
+
+
+@given(chunk=st.sampled_from([8, 16, 32]), seed=st.integers(0, 10))
+@settings(max_examples=12, deadline=None)
+def test_mlstm_chunkwise_property(chunk, seed):
+    ks = keys(5, seed)
+    B, S, H, D = 1, 64, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    i_raw = jax.random.normal(ks[3], (B, S, H))
+    f_raw = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    h_ref, st_ref = xm.mlstm_sequential(q, k, v, i_raw, f_raw)
+    h_ck, st_ck = xm.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_ck), np.asarray(h_ref),
+                               atol=5e-4, rtol=1e-3)
+    for a, b in zip(st_ref, st_ck):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_mlstm_decode_continuation():
+    ks = keys(5)
+    B, S, H, D = 2, 32, 2, 8
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, D)) for i in range(3))
+    i_raw = jax.random.normal(ks[3], (B, S, H))
+    f_raw = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    h_full, _ = xm.mlstm_sequential(q, k, v, i_raw, f_raw)
+    _, st = xm.mlstm_sequential(q[:, :-1], k[:, :-1], v[:, :-1],
+                                i_raw[:, :-1], f_raw[:, :-1])
+    h_step, _ = xm.mlstm_step(q[:, -1], k[:, -1], v[:, -1],
+                              i_raw[:, -1], f_raw[:, -1], st)
+    np.testing.assert_allclose(np.asarray(h_step), np.asarray(h_full[:, -1]),
+                               atol=1e-5)
+
+
+def test_slstm_bounded_and_stateful():
+    ks = keys(8)
+    B, S, H, D = 1, 48, 2, 8
+    gates = {g: jax.random.normal(ks[i], (B, S, H, D))
+             for i, g in enumerate(["z", "f", "i", "o"])}
+    r = {g: jax.random.normal(ks[4 + i], (H, D, D)) * 0.2
+         for i, g in enumerate(["z", "f", "i", "o"])}
+    h, state = xm.slstm_scan(gates, r)
+    assert jnp.isfinite(h).all()
+    assert jnp.abs(h).max() < 10.0  # normalised memory keeps h bounded
+    # chaining halves == full
+    h1, s1 = xm.slstm_scan({g: v[:, :24] for g, v in gates.items()}, r)
+    h2, s2 = xm.slstm_scan({g: v[:, 24:] for g, v in gates.items()}, r, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h), atol=1e-5)
+
+
+# -- RG-LRU ----------------------------------------------------------------------
+
+
+def test_rglru_scan_matches_step():
+    ks = keys(2)
+    params = {
+        "lambda": jnp.ones((64,)) * 0.5,
+        "w_a": jax.random.normal(ks[0], (64,)) * 0.1,
+        "b_a": jnp.zeros((64,)),
+        "w_x": jax.random.normal(ks[1], (64,)) * 0.1,
+        "b_x": jnp.zeros((64,)),
+    }
+    x = jax.random.normal(ks[0], (2, 16, 64))
+    y_scan, h_last = rglru_scan(params, x)
+    h = jnp.zeros((2, 64))
+    for t in range(16):
+        y_t, h = rglru_step(params, x[:, t], h)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_scan[:, t]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_last), atol=1e-5)
+
+
+def test_causal_conv1d_is_causal():
+    ks = keys(2)
+    w = jax.random.normal(ks[0], (4, 8))
+    x = jax.random.normal(ks[1], (1, 16, 8))
+    y, _ = causal_conv1d(w, x)
+    x2 = x.at[:, 10:].set(0.0)
+    y2, _ = causal_conv1d(w, x2)
+    np.testing.assert_allclose(np.asarray(y[:, :10]), np.asarray(y2[:, :10]),
+                               atol=1e-6)
+
+
+# -- MoE ------------------------------------------------------------------------
+
+
+@given(top_k=st.sampled_from([1, 2, 4]), seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_moe_routing_invariants(top_k, seed):
+    ks = keys(3, seed)
+    B, S, D, E, F = 2, 16, 32, 8, 64
+    x = jax.random.normal(ks[0], (B, S, D))
+    params = {
+        "router": jax.random.normal(ks[1], (D, E)) * 0.1,
+        "w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.05,
+        "w_up": jax.random.normal(ks[0], (E, D, F)) * 0.05,
+        "w_down": jax.random.normal(ks[1], (E, F, D)) * 0.05,
+    }
+    out, aux = moe_mod.moe_ffn(x, params, num_experts=E, top_k=top_k,
+                               capacity_factor=8.0,
+                               compute_dtype=jnp.float32)
+    assert out.shape == x.shape
+    assert jnp.isfinite(out).all()
+    # with generous capacity nothing is dropped
+    assert float(aux["moe_drop_fraction"]) == 0.0
+    # load-balance loss >= 1 (equality at perfect uniformity)
+    assert float(aux["moe_lb_loss"]) >= 0.99
+
+
+def test_moe_capacity_drops_are_reported():
+    ks = keys(2)
+    B, S, D, E, F = 2, 32, 16, 4, 32
+    x = jax.random.normal(ks[0], (B, S, D))
+    # heavily skewed router -> one expert overloaded at cf=0.25
+    router = jnp.zeros((D, E)).at[:, 0].set(5.0)
+    params = {
+        "router": router,
+        "w_gate": jax.random.normal(ks[1], (E, D, F)) * 0.05,
+        "w_up": jax.random.normal(ks[0], (E, D, F)) * 0.05,
+        "w_down": jax.random.normal(ks[1], (E, F, D)) * 0.05,
+    }
+    _out, aux = moe_mod.moe_ffn(x, params, num_experts=E, top_k=1,
+                                capacity_factor=0.25,
+                                compute_dtype=jnp.float32)
+    assert float(aux["moe_drop_fraction"]) > 0.5
+
+
+# -- chunked CE -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_chunked_ce_matches_full(chunk):
+    ks = keys(3)
+    B, S, D, V, Vp = 2, 64, 16, 50, 56
+    x = jax.random.normal(ks[0], (B, S, D))
+    head = jax.random.normal(ks[1], (D, Vp)) * 0.1
+    targets = jax.random.randint(ks[2], (B, S), 0, V)
+    ce = chunked_cross_entropy(x, head, targets, vocab_size=V,
+                               seq_chunk=chunk, compute_dtype=jnp.float32)
+    # full reference over the true vocab only
+    logits = (x @ head)[..., :V]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    ref = jnp.mean(lse - tgt)
+    np.testing.assert_allclose(float(ce), float(ref), rtol=1e-5)
+    un = chunked_cross_entropy(x, head, targets, vocab_size=V,
+                               seq_chunk=chunk, compute_dtype=jnp.float32,
+                               unroll=True)
+    np.testing.assert_allclose(float(un), float(ref), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 100), e=st.sampled_from([2, 8, 64]))
+@settings(max_examples=30, deadline=None)
+def test_moe_sort_dispatch_equals_onehot(seed, e):
+    """The O(T) stable-argsort position computation must assign exactly the
+    GShard one-hot cumsum positions (the §Perf cell-1 optimization is
+    semantics-preserving)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 400))
+    fe = jnp.asarray(rng.integers(0, e, n), jnp.int32)
+    a = moe_mod.position_in_expert_onehot(fe, e)
+    b = moe_mod.position_in_expert_sort(fe, e)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_grouped_dispatch_is_batch_local():
+    """Grouped dispatch: permuting batch rows permutes outputs (no
+    cross-row interaction) — the property that keeps dispatch local to
+    each data shard."""
+    ks = keys(5)
+    B, S, D, E, F = 4, 16, 16, 4, 32
+    x = jax.random.normal(ks[0], (B, S, D))
+    params = {
+        "router": jax.random.normal(ks[1], (D, E)) * 0.1,
+        "w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.05,
+        "w_up": jax.random.normal(ks[3], (E, D, F)) * 0.05,
+        "w_down": jax.random.normal(ks[4], (E, F, D)) * 0.05,
+    }
+    kw = dict(num_experts=E, top_k=2, capacity_factor=8.0,
+              compute_dtype=jnp.float32)
+    out, _ = moe_mod.moe_ffn(x, params, **kw)
+    perm = jnp.asarray([2, 0, 3, 1])
+    out_p, _ = moe_mod.moe_ffn(x[perm], params, **kw)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out[perm]),
+                               atol=1e-5)
