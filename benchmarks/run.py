@@ -80,9 +80,12 @@ def _mandelbrot_spec(nclusters: int, workers: int) -> ClusterSpec:
     )
 
 
-def _run_spec(nclusters: int, workers: int):
+def _run_spec(nclusters: int, workers: int, backend: str = "threads"):
     builder = ClusterBuilder()
-    app = builder.build_application(_mandelbrot_spec(nclusters, workers))
+    kw = {"job_timeout": 600.0} if backend == "cluster" else {}
+    app = builder.build_application(
+        _mandelbrot_spec(nclusters, workers), backend=backend, **kw
+    )
     t0 = time.perf_counter()
     result = app.run()
     dt = time.perf_counter() - t0
@@ -130,6 +133,52 @@ def table2_cluster_scaling() -> list[str]:
             f"speedup={speedup:.2f};efficiency={100 * eff:.1f}%"
             f";items={'/'.join(str(items[k]) for k in sorted(items))}"
         )
+    return rows
+
+
+def table4_threads_vs_processes() -> list[str]:
+    """Threads-vs-processes column for Table 1: the same Mandelbrot spec run
+    by the threaded runtime (§6.1 confidence mode) and by the real
+    multi-process transport (repro.cluster: subprocess node-loaders + TCP).
+
+    Process nodes pay a real load phase (interpreter start, code shipping,
+    jax import inside the work function) — exactly the load-vs-run split the
+    paper accounts in §8.2 — but escape the host GIL entirely.  The full
+    comparison is also written to results/bench_cluster.json.
+    """
+    comparison: dict[str, dict] = {}
+    rows = []
+    expected = None
+    for backend in ("threads", "cluster"):
+        dt, result, timing = _run_spec(2, 2, backend=backend)
+        expected = expected or result
+        items = {t.node_id: t.items for t in timing.nodes
+                 if t.node_id.startswith("node")}
+        comparison[backend] = {
+            "seconds": round(dt, 4),
+            "points": result[2],
+            "results_match": result == expected,
+            "load_ms": round(timing.total_load_ms(), 3),
+            "run_ms": round(timing.total_run_ms(), 3),
+            "items_per_node": items,
+        }
+        rows.append(
+            f"table4_{backend}_nodes2_workers2,{dt * 1e6:.0f},"
+            f"points={result[2]}"
+            f";items={'/'.join(str(items[k]) for k in sorted(items))}"
+            f";load_ms={timing.total_load_ms():.1f}"
+        )
+    comparison["process_over_thread_ratio"] = round(
+        comparison["cluster"]["seconds"] / comparison["threads"]["seconds"], 3
+    )
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "bench_cluster.json")
+    with open(out_path, "w") as fh:
+        json.dump({"mandelbrot_threads_vs_processes": comparison}, fh, indent=2)
+    rows.append(
+        f"table4_json,0,written={os.path.relpath(out_path, os.path.dirname(__file__))}"
+    )
     return rows
 
 
@@ -230,6 +279,7 @@ def main() -> None:
         table1_worker_scaling,
         table2_cluster_scaling,
         table3_multicore_vs_cluster,
+        table4_threads_vs_processes,
         load_time_linearity,
         verification_cost,
         kernel_microbench,

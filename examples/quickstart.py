@@ -7,7 +7,10 @@ local cluster runtime (section 6.1 single-host mode) and reports the paper's
 counts + per-node timing (requirement 7).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+      PYTHONPATH=src python examples/quickstart.py cluster   # real subprocesses
 """
+
+import sys
 
 import jax.numpy as jnp
 
@@ -88,7 +91,10 @@ def main() -> None:
     builder = ClusterBuilder()
     print(builder.deployment_plan(spec).describe(), "\n")
 
-    app = builder.build_application(spec)
+    # "cluster" runs the identical spec over real node-loader subprocesses
+    # connected by TCP (repro.cluster, paper §4) instead of threads.
+    backend = sys.argv[1] if len(sys.argv) > 1 else "threads"
+    app = builder.build_application(spec, backend=backend)
     result = app.run()
     # paper prints: points, whiteCount, blackCount, totalIters
     print(f"{result['points']}, {result['white']}, {result['black']}, "

@@ -1,0 +1,34 @@
+"""repro.cluster — the real (multi-process, TCP) deployment subsystem.
+
+The paper's central deliverable is *deployment*: a Host-Node-Loader (HNL)
+bootstraps a load network on port 2000 / channel 1, ships code to Node-Loaders
+(NL) running on idle workstations, wires the application network, and only
+then runs the emit/cluster/collect farm (§4, Figure 1).  ``runtime.local``
+executes the same network as threads in one process; this package crosses the
+process boundary: the *same* :class:`~repro.core.dsl.ClusterSpec` runs over
+real OS processes connected by sockets, with zero changes to user code —
+``ClusterBuilder.build_application(spec, backend="cluster")``.
+
+Modules (one per architectural role):
+
+* :mod:`repro.cluster.wire` — length-prefixed msgpack/pickle wire format with
+  a typed frame header (REGISTER/LOAD/WORK_REQUEST/WORK/RESULT/HEARTBEAT/UT);
+* :mod:`repro.cluster.netchannels` — socket-backed channel ends with the same
+  blocking one-place-buffer API as the threaded queues, so the protocol
+  model-checked by ``core.verify`` still describes the network;
+* :mod:`repro.cluster.host_loader` — the Host-Node-Loader (registration,
+  code broadcast, the onrl server loop, collect, failure re-dispatch);
+* :mod:`repro.cluster.node_loader` — the Node-Loader a worker machine runs
+  (register, load, request→compute→deliver, UT shutdown);
+* :mod:`repro.cluster.membership` — registry + heartbeat tracking feeding the
+  ``runtime.failures`` detection thresholds;
+* :mod:`repro.cluster.spawn` — single-machine launcher forking N node-loader
+  subprocesses (the paper's §6.1 "test on one host first" mode with true
+  process isolation).
+
+This package must stay importable without jax: the node-loader bootstrap path
+(wire/netchannels/membership/node_loader) imports no accelerator code; user
+work functions pull in whatever they need when the shipped code is loaded.
+"""
+
+from repro.cluster.wire import UT, Frame, FrameType  # noqa: F401

@@ -1,0 +1,386 @@
+"""The Host-Node-Loader (HNL): paper §4 / Figure 1, over real sockets.
+
+Bootstrap sequence (the load network):
+
+1. HNL listens on the configurable "port 2000" and waits for one REGISTER
+   frame per expected node (many-to-one input channel — input end created
+   before any output end exists, §4's ordering rule).
+2. HNL broadcasts the serialized deployment to every node on the LOAD frame —
+   the JCSP *code-loading channel* analogue (§4.1): the work function (and
+   any AOT-serialized executables) travel by value, so the host is the single
+   source of code.
+3. The application network (WORK_REQUEST/WORK/RESULT/UT) then runs the
+   demand-driven onrl/nrfa client-server protocol model-checked in
+   ``core.verify``: the host answers each node's request in finite time with
+   the next work object, or with UT once the emit stream is exhausted and
+   nothing is in flight.
+4. On UT each node returns its (load_ms, run_ms, items) timing record
+   (requirement 7) and the HNL folds results via the user's ResultDetails.
+
+Beyond the paper: heartbeat liveness (``membership``) — a node-loader that
+dies mid-job is detected by missed beats, its in-flight items re-queued and
+re-dispatched to surviving nodes, with result-id dedup guaranteeing no item
+is lost or double-collected.
+
+Single-threaded protocol core: per-connection reader threads and a ticker
+only *enqueue* events; one dispatcher consumes them.  That makes the state
+machine deterministic and trivially deadlock-free (no locks around protocol
+state).
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import socket
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any
+
+from repro.cluster.membership import Membership
+from repro.cluster.wire import (
+    APP_WIRE_CHANNEL,
+    LOAD_WIRE_CHANNEL,
+    Frame,
+    FrameConnection,
+    FrameType,
+)
+from repro.core.timing import TimingCollector
+from repro.runtime.failures import HeartbeatMonitor
+
+
+@dataclass
+class HostStats:
+    items_total: int = 0
+    duplicates_dropped: int = 0
+    redispatched: int = 0
+    deaths_detected: int = 0
+
+
+class WorkFunctionError(RuntimeError):
+    """The user's work function raised on a node; the job fails fast."""
+
+
+class HostLoader:
+    """Runs the host side of one emit/cluster/collect deployment."""
+
+    def __init__(
+        self,
+        spec,
+        timing: TimingCollector | None = None,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        heartbeat: HeartbeatMonitor | None = None,
+        register_timeout: float = 30.0,
+        job_timeout: float | None = None,
+        slowdown: dict[str, float] | None = None,
+        artifacts: dict[str, bytes] | None = None,
+    ):
+        spec.validate()
+        self.spec = spec
+        self.timing = timing or TimingCollector()
+        self.host = host
+        self.membership = Membership(heartbeat or HeartbeatMonitor())
+        self.register_timeout = register_timeout
+        self.job_timeout = job_timeout
+        self.slowdown = dict(slowdown or {})
+        self.artifacts = dict(artifacts or {})
+        self.stats = HostStats()
+        self.result: Any = None
+
+        self._events: queue.Queue = queue.Queue()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(spec.nclusters + 4)
+        self.port = self._listener.getsockname()[1]
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    # -- bootstrap ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Open the load network (accept + ticker threads)."""
+        for fn, name in ((self._accept_loop, "hnl-accept"),
+                         (self._tick_loop, "hnl-ticker")):
+            t = threading.Thread(target=fn, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, addr = self._listener.accept()
+            except OSError:
+                return
+            conn = FrameConnection(sock)
+            t = threading.Thread(
+                target=self._conn_reader, args=(conn, f"{addr[0]}:{addr[1]}"),
+                name=f"hnl-reader-{addr[1]}", daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+
+    def _conn_reader(self, conn: FrameConnection, addr: str) -> None:
+        node_id = None
+        try:
+            first = conn.recv()
+            if first.ftype is not FrameType.REGISTER:
+                conn.close()
+                return
+            node_id = first.payload["node_id"]
+            self._events.put(("register", node_id, addr, conn, first.payload))
+            while True:
+                frame = conn.recv()
+                self._events.put(("frame", node_id, frame))
+        except (ConnectionError, OSError, ValueError):
+            if node_id is not None:
+                self._events.put(("disconnect", node_id))
+
+    def _tick_loop(self) -> None:
+        interval = self.membership.monitor.interval_s / 2
+        while not self._stop.wait(interval):
+            self._events.put(("tick",))
+
+    # -- the dispatcher -----------------------------------------------------
+
+    def run(self) -> Any:
+        """Bootstrap, run the farm to termination, return the final result."""
+        spec = self.spec
+        deadline = (
+            time.monotonic() + self.job_timeout if self.job_timeout else None
+        )
+
+        with self.timing.phase("host", "load"):
+            self._await_registrations()
+            self._broadcast_load()
+
+        details = spec.host_net.emit.e_details
+        emit_state = details.initial_state()
+        emit_done = False
+        next_id = 0
+        pending: collections.deque = collections.deque()  # requeued (id, obj)
+        inflight: dict[int, tuple[str, Any]] = {}
+        done_ids: set[int] = set()
+        waiting: collections.deque = collections.deque()  # parked requests
+        r_details = spec.host_net.collector.r_details
+        acc = r_details.init()
+
+        def next_item():
+            nonlocal emit_state, emit_done, next_id
+            if pending:
+                return pending.popleft()
+            if emit_done:
+                return None
+            obj, emit_state = details.create(emit_state)
+            if obj is None:
+                emit_done = True
+                return None
+            item = (next_id, obj)
+            next_id += 1
+            return item
+
+        def send_work(node_id: str, item) -> bool:
+            rec = self.membership.nodes[node_id]
+            item_id, obj = item
+            try:
+                rec.conn.send(Frame(
+                    FrameType.WORK, {"id": item_id, "obj": obj},
+                    APP_WIRE_CHANNEL,
+                ))
+            except (OSError, ValueError):
+                pending.appendleft(item)  # never lose an item on a dead pipe
+                return False
+            inflight[item_id] = (node_id, obj)
+            return True
+
+        def send_ut(node_id: str) -> None:
+            rec = self.membership.nodes[node_id]
+            try:
+                rec.conn.send(Frame(FrameType.UT, None, APP_WIRE_CHANNEL))
+            except (OSError, ValueError):
+                pass
+
+        def answer(node_id: str) -> None:
+            """Answer one WORK_REQUEST (the onrl server obligation)."""
+            rec = self.membership.nodes.get(node_id)
+            if rec is None or not rec.alive:
+                return
+            item = next_item()
+            if item is not None:
+                if not send_work(node_id, item):
+                    waiting.append(node_id)  # retried once the node is reaped
+                return
+            if emit_done and not inflight:
+                send_ut(node_id)
+            else:
+                waiting.append(node_id)  # emit drained but items in flight
+
+        def flush_waiting() -> None:
+            for _ in range(len(waiting)):
+                answer(waiting.popleft())
+
+        def reap(now: float | None = None) -> None:
+            newly_dead = self.membership.reap(now, at_item=len(done_ids))
+            for rec in newly_dead:
+                self.stats.deaths_detected += 1
+                lost = [iid for iid, (nid, _) in inflight.items()
+                        if nid == rec.node_id]
+                for iid in lost:
+                    _, obj = inflight.pop(iid)
+                    pending.append((iid, obj))
+                    self.stats.redispatched += 1
+                # A parked request from a dead node can never be answered.
+                while rec.node_id in waiting:
+                    waiting.remove(rec.node_id)
+            if newly_dead:
+                flush_waiting()
+
+        with self.timing.phase("host", "run"):
+            while True:
+                if (emit_done and not inflight and not pending
+                        and self.membership.finished()):
+                    break
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"cluster job exceeded {self.job_timeout}s "
+                        f"(done={len(done_ids)}, inflight={len(inflight)}, "
+                        f"membership:\n{self.membership.describe()})"
+                    )
+                try:
+                    event = self._events.get(
+                        timeout=self.membership.monitor.interval_s
+                    )
+                except queue.Empty:
+                    continue
+                kind = event[0]
+                if kind == "frame":
+                    _, node_id, frame = event
+                    if frame.ftype is FrameType.WORK_REQUEST:
+                        answer(node_id)
+                    elif frame.ftype is FrameType.RESULT:
+                        p = frame.payload
+                        if "error" in p:
+                            raise WorkFunctionError(
+                                f"work function raised on {node_id} for item "
+                                f"{p['id']}: {p['error']}\n"
+                                f"{p.get('traceback', '')}"
+                            )
+                        # Always clear inflight — a redispatched item can
+                        # complete twice (zombie result + survivor result)
+                        # and both entries must go or termination stalls.
+                        inflight.pop(p["id"], None)
+                        if p["id"] in done_ids:
+                            self.stats.duplicates_dropped += 1
+                        else:
+                            done_ids.add(p["id"])
+                            acc = r_details.collect(acc, p["value"])
+                            self.stats.items_total += 1
+                            rec = self.membership.nodes[node_id]
+                            rec.items_done += 1
+                            self.timing.count_item(node_id)
+                        if emit_done and not inflight and not pending:
+                            flush_waiting()
+                    elif frame.ftype is FrameType.HEARTBEAT:
+                        self.membership.beat(node_id)
+                    elif frame.ftype is FrameType.UT:
+                        self._node_finished(node_id, frame.payload)
+                elif kind == "tick":
+                    reap()
+                elif kind == "disconnect":
+                    # The socket died; death itself is declared by the
+                    # heartbeat threshold (reap), keeping one detection path.
+                    pass
+                elif kind == "register":
+                    # Late joiner after bootstrap: not part of this job.
+                    _, _, _, conn, _ = event
+                    conn.close()
+                if not self.membership.alive_nodes() and (
+                        inflight or pending or not emit_done):
+                    raise RuntimeError(
+                        "all node-loaders died with work outstanding "
+                        f"({len(inflight)} in flight, {len(pending)} queued)"
+                    )
+
+        self.result = r_details.finalise(acc)
+        return self.result
+
+    # -- bootstrap helpers --------------------------------------------------
+
+    def _await_registrations(self) -> None:
+        deadline = time.monotonic() + self.register_timeout
+        expected = self.spec.nclusters
+        while len(self.membership.nodes) < expected:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"only {len(self.membership.nodes)}/{expected} node-loaders "
+                    f"registered within {self.register_timeout}s"
+                )
+            try:
+                event = self._events.get(timeout=remaining)
+            except queue.Empty:
+                continue
+            if event[0] == "frame":
+                # Early heartbeats (nodes beat from REGISTER onwards) must
+                # count, or a node registering early could be declared dead
+                # while the stragglers are still connecting.
+                _, node_id, frame = event
+                if frame.ftype is FrameType.HEARTBEAT:
+                    self.membership.beat(node_id)
+                continue
+            if event[0] != "register":
+                continue  # pre-bootstrap noise
+            _, node_id, addr, conn, payload = event
+            try:
+                self.membership.register(
+                    node_id, addr,
+                    cores=int(payload.get("cores", 1)),
+                    pid=int(payload.get("pid", 0)),
+                    conn=conn,
+                )
+            except ValueError:
+                conn.close()  # duplicate node_id: reject it, keep waiting
+
+    def _broadcast_load(self) -> None:
+        for rec in self.membership.alive_nodes():
+            try:
+                rec.conn.send(Frame(
+                    FrameType.LOAD,
+                    {
+                        "node_id": rec.node_id,
+                        "workers": self.spec.workers_per_node,
+                        "function": self.spec.node_net.group.function,
+                        "heartbeat_interval": self.membership.monitor.interval_s,
+                        "slowdown": float(self.slowdown.get(rec.node_id, 0.0)),
+                        "artifacts": self.artifacts,
+                    },
+                    LOAD_WIRE_CHANNEL,
+                ))
+            except (OSError, ValueError):
+                # Died between REGISTER and LOAD: a bootstrap-time node
+                # loss, handled like any other — survivors run the job.
+                self.membership.mark_dead(rec.node_id)
+                self.stats.deaths_detected += 1
+                continue
+            self.membership.mark_loaded(rec.node_id)
+
+    def _node_finished(self, node_id: str, payload: Any) -> None:
+        timing = payload or {}
+        self.membership.mark_done(node_id, timing)
+        self.timing.add(node_id, "load", float(timing.get("load_ms", 0.0)))
+        self.timing.add(node_id, "run", float(timing.get("run_ms", 0.0)))
+
+    # -- teardown -----------------------------------------------------------
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for rec in self.membership.nodes.values():
+            if rec.conn is not None:
+                rec.conn.close()

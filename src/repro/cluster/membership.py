@@ -1,0 +1,134 @@
+"""Node registry + heartbeat tracking for the Host-Node-Loader.
+
+The paper's HNL learns the cluster's membership from the registration
+messages arriving on the load network (port 2000 / channel 1) and assumes
+workstations stay up; we extend that with the standard heartbeat liveness
+protocol so a dead Node-Loader subprocess is *detected* (via
+:class:`repro.runtime.failures.HeartbeatMonitor` thresholds) and its
+in-flight work re-dispatched — the same detect→recover control path the SPMD
+executor exercises with injected ``node_loss`` events, now driven by a real
+process death.
+
+Pure bookkeeping: no sockets here.  The host loader feeds events in
+(``register``/``beat``/``mark_*``) and polls :meth:`Membership.reap` from
+its dispatcher loop.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.runtime.failures import FailureEvent, HeartbeatMonitor
+
+# Node lifecycle: REGISTERED -(LOAD)-> LOADED -(UT ack)-> DONE
+#                                   \-(missed beats)----> DEAD
+REGISTERED = "registered"
+LOADED = "loaded"
+DONE = "done"
+DEAD = "dead"
+
+
+@dataclass
+class NodeRecord:
+    node_id: str
+    index: int  # dense index, used as FailureEvent.node
+    address: str  # observed peer ip:port
+    cores: int = 1
+    pid: int = 0
+    state: str = REGISTERED
+    registered_at: float = 0.0
+    last_beat: float = 0.0
+    beats: int = 0
+    items_done: int = 0
+    timing: dict[str, Any] = field(default_factory=dict)
+    conn: Any = None  # FrameConnection; opaque to this module
+
+    @property
+    def alive(self) -> bool:
+        return self.state in (REGISTERED, LOADED)
+
+
+class Membership:
+    """The HNL's view of the cluster, with heartbeat-based death detection."""
+
+    def __init__(self, monitor: HeartbeatMonitor | None = None):
+        self.monitor = monitor or HeartbeatMonitor()
+        self.nodes: dict[str, NodeRecord] = {}
+        self.failures: list[FailureEvent] = []
+
+    def register(self, node_id: str, address: str, *, cores: int = 1,
+                 pid: int = 0, conn: Any = None,
+                 now: float | None = None) -> NodeRecord:
+        if node_id in self.nodes:
+            raise ValueError(f"duplicate registration for {node_id!r}")
+        now = time.monotonic() if now is None else now
+        rec = NodeRecord(
+            node_id=node_id,
+            index=len(self.nodes),
+            address=address,
+            cores=cores,
+            pid=pid,
+            registered_at=now,
+            last_beat=now,
+            conn=conn,
+        )
+        self.nodes[node_id] = rec
+        return rec
+
+    def beat(self, node_id: str, now: float | None = None) -> None:
+        rec = self.nodes.get(node_id)
+        if rec is None or not rec.alive:
+            return  # late beat from an already-reaped node: ignore
+        rec.last_beat = time.monotonic() if now is None else now
+        rec.beats += 1
+
+    def mark_loaded(self, node_id: str) -> None:
+        self.nodes[node_id].state = LOADED
+
+    def mark_done(self, node_id: str, timing: dict[str, Any] | None = None) -> None:
+        rec = self.nodes[node_id]
+        rec.state = DONE
+        if timing:
+            rec.timing = dict(timing)
+
+    def mark_dead(self, node_id: str, *, at_item: int = 0) -> FailureEvent | None:
+        rec = self.nodes.get(node_id)
+        if rec is None or rec.state == DEAD:
+            return None
+        rec.state = DEAD
+        ev = FailureEvent(step=at_item, kind="node_loss", node=rec.index)
+        self.failures.append(ev)
+        return ev
+
+    # -- liveness -----------------------------------------------------------
+
+    def reap(self, now: float | None = None, *, at_item: int = 0
+             ) -> list[NodeRecord]:
+        """Declare nodes whose heartbeats exceeded the threshold dead."""
+        now = time.monotonic() if now is None else now
+        newly_dead = []
+        for rec in self.nodes.values():
+            if rec.alive and self.monitor.is_dead(rec.last_beat, now):
+                self.mark_dead(rec.node_id, at_item=at_item)
+                newly_dead.append(rec)
+        return newly_dead
+
+    # -- queries ------------------------------------------------------------
+
+    def alive_nodes(self) -> list[NodeRecord]:
+        return [r for r in self.nodes.values() if r.alive]
+
+    def finished(self) -> bool:
+        """True when no node is still expected to produce anything."""
+        return all(r.state in (DONE, DEAD) for r in self.nodes.values())
+
+    def describe(self) -> str:
+        lines = [f"{'node':<10}{'state':<12}{'addr':<22}{'beats':>6}{'items':>7}"]
+        for r in sorted(self.nodes.values(), key=lambda r: r.index):
+            lines.append(
+                f"{r.node_id:<10}{r.state:<12}{r.address:<22}"
+                f"{r.beats:>6d}{r.items_done:>7d}"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,231 @@
+"""The Node-Loader (NL): the identical executable every worker machine runs.
+
+Paper §4: the user starts *one* NodeLoader per node — it knows only the
+host's load address ("ip:2000/1"); everything else (code, topology, worker
+count) arrives over the load network.  Mirroring that:
+
+    python -m repro.cluster.node_loader --host 127.0.0.1 --port <p>
+
+Lifecycle (timed per requirement 7 — load vs run accounted separately):
+
+1. connect + REGISTER (node id, cores, pid) on the load channel;
+2. receive LOAD: the deployment payload (work function shipped by value —
+   the code-loading channel; optional AOT-serialized executables land in
+   :data:`ARTIFACTS` for work functions that want them);
+3. start the heartbeat beacon and the node-local Figure-2 fragment:
+   the nrfa client (one-place buffer: request only after the previous object
+   was handed to an idle worker) + ``workers`` worker threads + result
+   delivery (the afoc merge is the shared, locked socket);
+4. on UT: flood workers with UT, join them, return (load_ms, run_ms, items)
+   to the host in a final UT frame, exit 0.
+
+This module must import without jax — a node-loader on a fresh workstation
+is a bare bootstrap; the shipped code pulls in its own dependencies when
+deserialized.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import queue
+import socket
+import threading
+import time
+import traceback
+from typing import Any
+
+from repro.cluster.netchannels import ChannelClosed, ChannelMux
+from repro.cluster.wire import (
+    APP_WIRE_CHANNEL,
+    LOAD_WIRE_CHANNEL,
+    UT,
+    Frame,
+    FrameConnection,
+    FrameType,
+)
+
+# AOT-serialized executables shipped in the LOAD payload, keyed by name.
+# Work functions may read these (e.g. deserialize_and_load a compiled step).
+ARTIFACTS: dict[str, bytes] = {}
+
+
+def run_node(
+    host: str,
+    port: int,
+    *,
+    node_id: str | None = None,
+    connect_timeout: float = 30.0,
+) -> dict[str, Any]:
+    """Run one Node-Loader to completion; returns its timing record."""
+    node_id = node_id or f"{socket.gethostname()}-{os.getpid()}"
+    t_load0 = time.perf_counter()
+
+    sock = socket.create_connection((host, port), timeout=connect_timeout)
+    sock.settimeout(None)
+    conn = FrameConnection(sock)
+    mux = ChannelMux(conn)
+    load_ch = mux.open(LOAD_WIRE_CHANNEL, FrameType.LOAD, maxsize=4)
+    app_ch = mux.open(APP_WIRE_CHANNEL, FrameType.WORK, maxsize=1)
+    mux.start()  # input ends exist before we announce ourselves (§4 ordering)
+
+    conn.send(Frame(
+        FrameType.REGISTER,
+        {"node_id": node_id, "cores": os.cpu_count() or 1, "pid": os.getpid()},
+        LOAD_WIRE_CHANNEL,
+    ))
+
+    # The beacon starts *before* the LOAD payload is deserialized: shipped
+    # code may drag in heavy imports (jax), and the host must not mistake
+    # that load phase for death.  The interval is refined once the plan says
+    # what the host expects.
+    stop_beat = threading.Event()
+    beat_interval = [0.1]
+
+    def heartbeat() -> None:
+        while not stop_beat.wait(beat_interval[0]):
+            try:
+                conn.send(Frame(
+                    FrameType.HEARTBEAT, {"node_id": node_id},
+                    LOAD_WIRE_CHANNEL,
+                ))
+            except OSError:
+                return
+
+    beat_thread = threading.Thread(target=heartbeat, name="nl-heartbeat",
+                                   daemon=True)
+    beat_thread.start()
+
+    try:
+        plan = load_ch.get(timeout=connect_timeout)
+    except queue.Empty:
+        stop_beat.set()
+        conn.close()
+        raise ConnectionError(
+            f"no LOAD received from the host within {connect_timeout}s "
+            "(are all expected node-loaders up?)"
+        ) from None
+    if plan is UT:  # host aborted during bootstrap
+        stop_beat.set()
+        conn.close()
+        return {"node_id": node_id, "load_ms": 0.0, "run_ms": 0.0, "items": 0}
+    fn = plan["function"]
+    workers = int(plan["workers"])
+    slowdown = float(plan.get("slowdown", 0.0))
+    beat_interval[0] = float(plan.get("heartbeat_interval", 0.2))
+    ARTIFACTS.clear()
+    ARTIFACTS.update(plan.get("artifacts") or {})
+    load_ms = (time.perf_counter() - t_load0) * 1e3
+
+    # -- the node-local Figure-2 fragment -----------------------------------
+    work_q: queue.Queue = queue.Queue(maxsize=1)  # the nrfa one-place buffer
+    items_done = 0
+    items_lock = threading.Lock()
+
+    def worker() -> None:
+        nonlocal items_done
+        while True:
+            item = work_q.get()
+            if item is UT:
+                return
+            try:
+                value = fn(item["obj"])
+                if slowdown > 0.0:
+                    time.sleep(slowdown)  # injected straggler (§6.1 testing)
+                # Inside the try: an unserialisable result must be reported
+                # too, not silently kill the thread.
+                conn.send(Frame(
+                    FrameType.RESULT,
+                    {"id": item["id"], "value": value, "node_id": node_id},
+                    APP_WIRE_CHANNEL,
+                ))
+            except BaseException as exc:
+                # Report instead of dying silently: a dead worker thread
+                # would stall the node (heartbeats keep flowing, so the
+                # host would never re-dispatch).  The host fails the job.
+                try:
+                    conn.send(Frame(
+                        FrameType.RESULT,
+                        {"id": item["id"], "node_id": node_id,
+                         "error": f"{type(exc).__name__}: {exc}",
+                         "traceback": traceback.format_exc()},
+                        APP_WIRE_CHANNEL,
+                    ))
+                except OSError:
+                    pass  # socket gone: the nrfa loop shuts the node down
+                continue
+            with items_lock:
+                items_done += 1
+
+    worker_threads = [
+        threading.Thread(target=worker, name=f"nl-worker{i}", daemon=True)
+        for i in range(workers)
+    ]
+    for t in worker_threads:
+        t.start()
+
+    t_run0 = time.perf_counter()
+    try:
+        while True:  # the nrfa client loop (b!i.S ; c?i.o ; d!i.o)
+            conn.send(Frame(FrameType.WORK_REQUEST, {"node_id": node_id},
+                            APP_WIRE_CHANNEL))
+            obj = app_ch.get()
+            if obj is UT:
+                for _ in range(workers):
+                    work_q.put(UT)
+                break
+            work_q.put(obj)  # blocks until a worker idles — then re-request
+    except (ChannelClosed, OSError):
+        # Host vanished (mid-recv or mid-request-send): there is nobody to
+        # deliver to; shut down quietly.
+        for _ in range(workers):
+            work_q.put(UT)
+    for t in worker_threads:
+        t.join()
+    run_ms = (time.perf_counter() - t_run0) * 1e3
+    stop_beat.set()
+
+    record = {
+        "node_id": node_id,
+        "load_ms": round(load_ms, 3),
+        "run_ms": round(run_ms, 3),
+        "items": items_done,
+    }
+    try:
+        conn.send(Frame(FrameType.UT, record, LOAD_WIRE_CHANNEL))
+    except OSError:
+        pass
+    conn.close()
+    return record
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        description="ClusterBuilder Node-Loader (paper §4)"
+    )
+    parser.add_argument("--host", required=True,
+                        help="Host-Node-Loader address")
+    parser.add_argument("--port", type=int, required=True,
+                        help="load network port (the paper's 2000)")
+    parser.add_argument("--node-id", default=None)
+    parser.add_argument("--connect-timeout", type=float, default=30.0)
+    args = parser.parse_args(argv)
+    try:
+        record = run_node(
+            args.host, args.port,
+            node_id=args.node_id,
+            connect_timeout=args.connect_timeout,
+        )
+    except (ConnectionError, socket.timeout, OSError) as exc:
+        print(
+            f"node-loader: cannot reach host-node-loader at "
+            f"{args.host}:{args.port}: {exc}",
+            flush=True,
+        )
+        return 1
+    print(f"node-loader done: {record}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

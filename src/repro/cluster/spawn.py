@@ -1,0 +1,178 @@
+"""Single-machine launcher: N real node-loader subprocesses + in-process HNL.
+
+The paper's §6.1 workflow — "operation and testing of a system can be
+conducted on a single host node before using multiple nodes" — with true
+process isolation: each Node-Loader is a fresh ``python -m
+repro.cluster.node_loader`` OS process talking TCP on localhost, so there is
+no GIL coupling and killing one is a *real* node death, not an injected one.
+Moving to many hosts later is only a matter of starting the same command on
+other machines (the node-loader needs nothing but the host address).
+
+The launcher exports the host's ``sys.path`` to the children so code shipped
+by reference (plain-pickle fallback, user modules) resolves; code shipped by
+value (cloudpickle closures) needs only the libraries it imports.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import subprocess
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.cluster.host_loader import HostLoader
+from repro.core.timing import TimingCollector
+from repro.runtime.failures import HeartbeatMonitor
+
+
+def _child_env() -> dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+    # Node-loaders are bootstrap processes: keep their (transitive) jax happy
+    # on CPU-only machines and their thread pools small.
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def spawn_node_loader(host: str, port: int, node_id: str,
+                      *, python: str = sys.executable) -> subprocess.Popen:
+    """Start one Node-Loader subprocess (the §4 'identical executable')."""
+    return subprocess.Popen(
+        [python, "-m", "repro.cluster.node_loader",
+         "--host", host, "--port", str(port), "--node-id", node_id],
+        env=_child_env(),
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+
+
+@dataclass
+class ProcessClusterApplication:
+    """Runnable returned by ``build_application(spec, backend="cluster")``.
+
+    Same contract as ``runtime.local.LocalClusterApplication`` — ``run()``
+    blocks to completion and returns the finalised result — but the workers
+    are real subprocesses.  ``slowdown`` maps node ids to an artificial
+    seconds-per-item delay (straggler injection for §6.1-style testing);
+    ``kill_node`` turns a live subprocess into a real mid-job node death.
+    """
+
+    spec: Any
+    plan: Any
+    timing: TimingCollector
+    port: int = 0  # 0 = ephemeral; the paper's deployment would fix 2000
+    # Defaults tolerate multi-second GC/compile stalls in work functions;
+    # tests override with much tighter settings.
+    heartbeat_interval: float = 0.5
+    heartbeat_misses: int = 10
+    job_timeout: float = 300.0
+    shutdown_grace: float = 10.0
+    slowdown: dict[str, float] = field(default_factory=dict)
+    artifacts: dict[str, bytes] = field(default_factory=dict)
+
+    host_loader: HostLoader | None = None
+    processes: dict[str, subprocess.Popen] = field(default_factory=dict)
+    # Last lines of each node-loader's stdout+stderr (drained continuously so
+    # a chatty child never blocks on a full pipe; kept for diagnostics).
+    node_logs: dict[str, "collections.deque[str]"] = field(default_factory=dict)
+    result: Any = None
+    error: BaseException | None = None  # set by run_async on failure
+    _ran: bool = False
+    _drainers: list[threading.Thread] = field(default_factory=list)
+
+    def node_ids(self) -> list[str]:
+        return [f"node{i}" for i in range(self.spec.nclusters)]
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Bootstrap the load network and fork the node-loaders."""
+        self.host_loader = HostLoader(
+            self.spec,
+            self.timing,
+            port=self.port,
+            heartbeat=HeartbeatMonitor(
+                interval_s=self.heartbeat_interval,
+                misses=self.heartbeat_misses,
+            ),
+            job_timeout=self.job_timeout,
+            slowdown=self.slowdown,
+            artifacts=self.artifacts,
+        )
+        self.host_loader.start()
+        for node_id in self.node_ids():
+            proc = spawn_node_loader("127.0.0.1", self.host_loader.port, node_id)
+            self.processes[node_id] = proc
+            self.node_logs[node_id] = collections.deque(maxlen=200)
+            for stream in (proc.stdout, proc.stderr):
+                t = threading.Thread(
+                    target=self._drain, args=(node_id, stream),
+                    name=f"drain-{node_id}", daemon=True,
+                )
+                t.start()
+                self._drainers.append(t)
+
+    def _drain(self, node_id: str, stream) -> None:
+        for line in stream:
+            self.node_logs[node_id].append(line.rstrip("\n"))
+        stream.close()
+
+    def run(self) -> Any:
+        if self._ran:
+            raise RuntimeError("application already ran; build a fresh one")
+        self._ran = True
+        if self.host_loader is None:
+            self.start()
+        try:
+            self.result = self.host_loader.run()
+        finally:
+            self._shutdown()
+        return self.result
+
+    def run_async(self) -> threading.Thread:
+        """Start and run in a background thread (lets callers kill nodes
+        mid-job); join the returned thread, then read ``result``/``error``."""
+
+        def target() -> None:
+            try:
+                self.run()
+            except BaseException as exc:  # surfaced via .error, not stderr
+                self.error = exc
+
+        t = threading.Thread(target=target, name="cluster-app", daemon=True)
+        t.start()
+        return t
+
+    def kill_node(self, node_id: str) -> None:
+        """SIGKILL a node-loader: a real workstation loss, detected only by
+        its heartbeats going silent."""
+        self.processes[node_id].kill()
+
+    # -- teardown -----------------------------------------------------------
+
+    def _shutdown(self) -> None:
+        # Close the host's sockets first: surviving node-loaders blocked on
+        # the application channel see ChannelClosed and exit promptly
+        # (milliseconds, exit 0) instead of burning the grace period.
+        if self.host_loader is not None:
+            self.host_loader.close()
+        deadline = time.monotonic() + self.shutdown_grace
+        for node_id, proc in self.processes.items():
+            remaining = max(0.0, deadline - time.monotonic())
+            try:
+                proc.wait(timeout=remaining)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait()
+        for t in self._drainers:  # EOF arrives once the child exits
+            t.join(timeout=5.0)
+
+    def orphaned(self) -> list[str]:
+        """Node-loaders still running after shutdown (must be empty)."""
+        return [nid for nid, p in self.processes.items()
+                if p.returncode is None]

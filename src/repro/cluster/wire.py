@@ -1,0 +1,227 @@
+"""Wire format of the load and application networks.
+
+Every message is one *frame*::
+
+    +-------+---------+-------+-------+---------+----------+-----------+
+    | magic | version | ftype | codec | channel | length   | payload   |
+    | 4B    | 1B      | 1B    | 1B    | 1B      | 4B (!I)  | length B  |
+    +-------+---------+-------+-------+---------+----------+-----------+
+
+``ftype`` is the protocol event — the same alphabet as the CSP model in
+``core.protocol`` plus the bootstrap events of paper §4 (Figure 1):
+REGISTER/LOAD/HEARTBEAT ride the *load network* (channel 1, the paper's
+"port 2000 channel 1"), WORK_REQUEST/WORK/RESULT/UT ride the *application
+network* (channel 2).  ``UT`` is the paper's Universal Terminator made
+visible on the wire.
+
+Payload encoding is dual: **msgpack** (codec 0) for protocol-internal
+messages built from plain JSON-ish data — cheap, language-neutral — and
+**pickle** (codec 1, via cloudpickle when available) for user objects and
+shipped code (the JCSP code-loading channel analogue of §4.1).  The encoder
+picks msgpack only when the object round-trips *exactly* (no tuple→list
+coercion of user data); anything else falls back to pickle.
+"""
+
+from __future__ import annotations
+
+import enum
+import io
+import pickle
+import socket
+import struct
+import threading
+from dataclasses import dataclass
+from typing import Any
+
+try:
+    import cloudpickle as _pickler
+except ImportError:  # pragma: no cover - cloudpickle is in the image
+    _pickler = pickle
+
+try:
+    import msgpack
+
+    _HAVE_MSGPACK = True
+except ImportError:  # pragma: no cover
+    _HAVE_MSGPACK = False
+
+MAGIC = b"CGPP"
+VERSION = 1
+LOAD_WIRE_CHANNEL = 1  # paper §6: the load network uses channel number 1
+APP_WIRE_CHANNEL = 2  # the application network runs on a separate channel
+
+# Guards against a corrupt length field consuming the heap.
+MAX_FRAME_BYTES = 512 * 2**20
+
+_HEADER = struct.Struct("!4sBBBBI")
+
+
+class FrameType(enum.IntEnum):
+    REGISTER = 1  # NL -> HNL: node id + capabilities (load network)
+    LOAD = 2  # HNL -> NL: serialized deployment (code-loading channel)
+    WORK_REQUEST = 3  # NL -> HNL: the nrfa client's demand signal (b!i.S)
+    WORK = 4  # HNL -> NL: one work object (c!i.o)
+    RESULT = 5  # NL -> HNL: one processed object (f!r)
+    HEARTBEAT = 6  # NL -> HNL: liveness beacon (load network)
+    UT = 7  # either direction: Universal Terminator / timing return
+
+
+class _CodecId(enum.IntEnum):
+    MSGPACK = 0
+    PICKLE = 1
+
+
+class UniversalTerminator:
+    """The paper's UT object (§4, Listing 3 {3:21}), wire edition."""
+
+    _instance: "UniversalTerminator | None" = None
+
+    def __new__(cls) -> "UniversalTerminator":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "UT"
+
+
+UT = UniversalTerminator()
+
+
+@dataclass(frozen=True)
+class Frame:
+    ftype: FrameType
+    payload: Any = None
+    channel: int = APP_WIRE_CHANNEL
+
+
+def _msgpack_safe(obj: Any) -> bool:
+    """True iff msgpack round-trips ``obj`` exactly (no tuple coercion)."""
+    if obj is None or isinstance(obj, (bool, str, bytes, float)):
+        return True
+    if isinstance(obj, int):
+        return -(2**63) <= obj < 2**64  # msgpack int range; beyond -> pickle
+    if isinstance(obj, list):
+        return all(_msgpack_safe(v) for v in obj)
+    if isinstance(obj, dict):
+        return all(
+            isinstance(k, str) and _msgpack_safe(v) for k, v in obj.items()
+        )
+    return False
+
+
+def encode_payload(obj: Any) -> tuple[int, bytes]:
+    if _HAVE_MSGPACK and _msgpack_safe(obj):
+        return _CodecId.MSGPACK, msgpack.packb(obj, use_bin_type=True)
+    return _CodecId.PICKLE, _pickler.dumps(obj)
+
+
+def decode_payload(codec: int, raw: bytes) -> Any:
+    if codec == _CodecId.MSGPACK:
+        if not _HAVE_MSGPACK:  # pragma: no cover - symmetric environments
+            raise RuntimeError("received msgpack frame but msgpack unavailable")
+        return msgpack.unpackb(raw, raw=False)
+    if codec == _CodecId.PICKLE:
+        return pickle.loads(raw)
+    raise ValueError(f"unknown payload codec {codec}")
+
+
+def pack_frame(frame: Frame) -> bytes:
+    codec, raw = encode_payload(frame.payload)
+    if len(raw) > MAX_FRAME_BYTES:
+        raise ValueError(f"frame payload too large: {len(raw)} bytes")
+    header = _HEADER.pack(
+        MAGIC, VERSION, int(frame.ftype), int(codec), frame.channel, len(raw)
+    )
+    return header + raw
+
+
+def unpack_frame(buf: bytes) -> Frame:
+    return read_frame(io.BytesIO(buf).read)
+
+
+def _read_exactly(read, n: int) -> bytes:
+    chunks = []
+    remaining = n
+    while remaining:
+        chunk = read(remaining)
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        chunks.append(chunk)
+        remaining -= len(chunk)
+    return b"".join(chunks)
+
+
+def read_frame(read) -> Frame:
+    """Read one frame from any ``read(n) -> bytes`` source (socket, buffer)."""
+    header = _read_exactly(read, _HEADER.size)
+    magic, version, ftype, codec, channel, length = _HEADER.unpack(header)
+    if magic != MAGIC:
+        raise ValueError(f"bad frame magic {magic!r}")
+    if version != VERSION:
+        raise ValueError(f"unsupported wire version {version}")
+    if length > MAX_FRAME_BYTES:
+        raise ValueError(f"frame length {length} exceeds cap")
+    raw = _read_exactly(read, length) if length else b""
+    return Frame(FrameType(ftype), decode_payload(codec, raw), channel)
+
+
+class FrameConnection:
+    """A framed, thread-safe view of one TCP socket.
+
+    Many threads may ``send`` (workers delivering results while the heartbeat
+    thread beats); exactly one thread should ``recv`` — the reader owns frame
+    routing (see :mod:`repro.cluster.netchannels`).
+    """
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._send_lock = threading.Lock()
+        self._closed = False
+        # TCP_NODELAY: frames are small and latency-sensitive (demand signals).
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:  # pragma: no cover - non-TCP sockets in tests
+            pass
+
+    @property
+    def peer(self) -> str:
+        try:
+            name = self.sock.getpeername()
+        except OSError:
+            return "<closed>"
+        if isinstance(name, tuple) and len(name) >= 2:
+            return f"{name[0]}:{name[1]}"
+        return str(name) or "<unnamed>"  # AF_UNIX pairs have no address
+
+    def send(self, frame: Frame) -> None:
+        data = pack_frame(frame)
+        with self._send_lock:
+            self.sock.sendall(data)
+
+    def recv(self) -> Frame:
+        return read_frame(self.sock.recv)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+def dumps_code(obj: Any) -> bytes:
+    """Serialise shipped code (work functions, details) by value.
+
+    cloudpickle captures closures and locally-defined functions; plain pickle
+    (the fallback) requires them to be importable on the node — which the
+    launcher guarantees by exporting the host's ``sys.path``.
+    """
+    return _pickler.dumps(obj)
+
+
+def loads_code(raw: bytes) -> Any:
+    return pickle.loads(raw)

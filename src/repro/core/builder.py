@@ -218,8 +218,9 @@ class ClusterBuilder:
         if out_shardings is not None:
             jit_kw["out_shardings"] = out_shardings
         jitted = jax.jit(fn, **jit_kw)
-        ctx = jax.set_mesh(self.mesh) if self.mesh is not None else _nullcontext()
-        with ctx:
+        from repro.launch.mesh import use_mesh
+
+        with use_mesh(self.mesh):
             lowered = jitted.lower(*example_args)
             compiled = lowered.compile() if compile_now else None
         load_ms = (time.perf_counter() - t0) * 1e3
@@ -255,23 +256,41 @@ class ClusterBuilder:
         ]
         return DeploymentPlan(host=spec.host, nodes=nodes)
 
-    def build_application(self, spec: ClusterSpec):
+    def build_application(self, spec: ClusterSpec, *, backend: str = "threads",
+                          **backend_options):
         """Wire the Figure-2 network and return a runnable application.
 
-        The runtime (threads + rendezvous channels on one machine, exactly
-        the paper's single-host confidence-building mode of §6.1) lives in
-        ``repro.runtime.local``; imported lazily to keep core dependency-free.
-        """
-        from repro.runtime.local import LocalClusterApplication
+        Backends (all run the *same* spec with zero user-code changes):
 
+        * ``"threads"`` — threads + rendezvous queues in one process
+          (``repro.runtime.local``; the paper's §6.1 single-host
+          confidence-building mode).
+        * ``"cluster"`` — real OS processes connected by TCP sockets via the
+          Host-Node-Loader / Node-Loader bootstrap of §4 / Figure 1
+          (``repro.cluster``).  ``backend_options`` are forwarded to
+          :class:`repro.cluster.spawn.ProcessClusterApplication` (e.g.
+          ``port=0``, ``slowdown={node_id: seconds_per_item}``).
+
+        Runtimes are imported lazily to keep core dependency-free.
+        """
         spec.validate()
         plan = self.deployment_plan(spec)
-        return LocalClusterApplication(spec=spec, plan=plan, timing=self.timing)
+        if backend == "threads":
+            if backend_options:
+                raise TypeError(
+                    f"threads backend takes no options, got {sorted(backend_options)}"
+                )
+            from repro.runtime.local import LocalClusterApplication
 
+            return LocalClusterApplication(
+                spec=spec, plan=plan, timing=self.timing
+            )
+        if backend == "cluster":
+            from repro.cluster.spawn import ProcessClusterApplication
 
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *exc):
-        return False
+            return ProcessClusterApplication(
+                spec=spec, plan=plan, timing=self.timing, **backend_options
+            )
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'threads' or 'cluster'"
+        )

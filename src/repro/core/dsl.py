@@ -148,28 +148,53 @@ def parse_cgpp(text: str, namespace: Mapping[str, Any] | None = None) -> Cluster
     host: str | None = None
     ncluster_expr: str | None = None
     current = "constants"
-    for raw in text.splitlines():
+    for lineno, raw in enumerate(text.splitlines(), start=1):
         line = raw.rstrip()
         stripped = line.strip()
         m = _EMIT_RE.match(stripped)
         if m:
             if current != "constants":
-                raise SyntaxError("//@emit must appear before //@cluster and //@collect")
+                raise SyntaxError(
+                    f"line {lineno}: {stripped!r} — "
+                    + ("duplicate //@emit annotation" if host is not None
+                       else "//@emit must appear before //@cluster and //@collect")
+                )
             host = m.group("host")
             current = "emit"
             continue
         m = _CLUSTER_RE.match(stripped)
         if m:
             if current != "emit":
-                raise SyntaxError("//@cluster must follow the emit section")
+                raise SyntaxError(
+                    f"line {lineno}: {stripped!r} — "
+                    + ("duplicate //@cluster annotation"
+                       if ncluster_expr is not None
+                       else "//@cluster must follow the emit section")
+                )
             ncluster_expr = m.group("n")
             current = "cluster"
             continue
         if _COLLECT_RE.match(stripped):
+            if current == "collect":
+                raise SyntaxError(
+                    f"line {lineno}: {stripped!r} — duplicate //@collect "
+                    "annotation"
+                )
             if current != "cluster":
-                raise SyntaxError("//@collect must follow the cluster section")
+                raise SyntaxError(
+                    f"line {lineno}: {stripped!r} — //@collect must follow "
+                    "the cluster section"
+                )
             current = "collect"
             continue
+        if stripped.startswith("//@"):
+            # An annotation-looking line that matched none of the three
+            # forms: report it rather than silently treating it as code.
+            raise SyntaxError(
+                f"line {lineno}: malformed annotation {stripped!r} — "
+                "expected '//@emit <host-ip>', '//@cluster <N>' or "
+                "'//@collect'"
+            )
         sections[current].append(line)
 
     if host is None:

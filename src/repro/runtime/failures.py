@@ -47,6 +47,28 @@ class FailurePlan:
 
 
 @dataclass
+class HeartbeatMonitor:
+    """Missed-heartbeat node-death detection (paper-style workstation loss).
+
+    A node is declared dead after ``misses`` consecutive missed beats — the
+    standard heartbeat threshold (cf. GFS/Borg practice).  Used by the real
+    multi-process transport (``repro.cluster.membership``): a dead subprocess
+    triggers the same re-dispatch path the injected ``node_loss`` events
+    exercise in the SPMD executor.
+    """
+
+    interval_s: float = 0.2
+    misses: int = 5
+
+    @property
+    def deadline_s(self) -> float:
+        return self.interval_s * self.misses
+
+    def is_dead(self, last_beat_s: float, now_s: float) -> bool:
+        return (now_s - last_beat_s) > self.deadline_s
+
+
+@dataclass
 class StragglerMonitor:
     """Step-time EMA + median straggler detection.
 

@@ -1,0 +1,104 @@
+"""Tiny deterministic stand-in for `hypothesis` (used when it isn't installed).
+
+The property tests in this suite only need ``@given``/``@settings`` and three
+strategies (``integers``, ``sampled_from``, ``lists``).  This fallback runs
+each property over a fixed-seed pseudo-random sample of the input space, so
+the properties still execute (deterministically) in environments without the
+real library.  When ``hypothesis`` is importable, ``conftest.py`` leaves it
+alone and this module is unused.
+
+Not a replacement for hypothesis: no shrinking, no example database, no
+coverage-guided generation — just enough API to keep tier-1 collection and
+the properties themselves running.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+# Fallback runs fewer examples than hypothesis would; the fixed seed keeps
+# the sampled subset identical across runs.
+_MAX_EXAMPLES_CAP = 25
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_by_name):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 100),
+            )
+            rnd = random.Random(0)
+            for _ in range(min(limit, _MAX_EXAMPLES_CAP)):
+                drawn = {k: s.draw(rnd) for k, s in strategies_by_name.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the drawn parameters from pytest's signature inspection —
+        # otherwise it would look for fixtures named after them.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        remaining = [
+            p for name, p in sig.parameters.items()
+            if name not in strategies_by_name
+        ]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def install(sys_modules) -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "lists", "booleans", "floats"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = st

@@ -31,10 +31,10 @@ def test_smoke_arch_compiles_on_multi_device_mesh():
     sharded-train-step semantics equal to single-device execution."""
     out = run_sub("""
         import jax, jax.numpy as jnp, dataclasses
-        from jax.sharding import AxisType
         from repro.configs.registry import get_config
         from repro.configs.base import ShapeConfig
         from repro.core.channels import training_rules
+        from repro.launch.mesh import compat_make_mesh, use_mesh
         from repro.runtime import steps as steps_mod
         from repro.models.common import init_params, param_shardings
         from repro.optim import adamw
@@ -44,8 +44,7 @@ def test_smoke_arch_compiles_on_multi_device_mesh():
                                   d_model=64, num_heads=4, num_kv_heads=4,
                                   vocab_size=256, compute_dtype='float32')
         shape = ShapeConfig('t', seq_len=32, global_batch=8, kind='train')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((2, 4), ('data', 'model'))
         rules = training_rules(mesh)
         opt_cfg = adamw.AdamWConfig()
         tp = 4
@@ -58,7 +57,7 @@ def test_smoke_arch_compiles_on_multi_device_mesh():
                                                  rules=rules))
         src = source_for(cfg, shape)
         batch = shard_batch(src.batch(0), rules)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             p1, o1, m1 = step(params, opt_state, batch, jnp.int32(0))
         print('sharded_loss', float(m1['loss']))
 
@@ -125,10 +124,10 @@ def test_executable_serialization_roundtrip():
     cover it (on a real pod every chip participates)."""
     out = run_sub(devices=4, code="""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.builder import ClusterBuilder
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 2), ('data', 'model'))
         x = jax.device_put(jnp.arange(16.0).reshape(4, 4),
                            NamedSharding(mesh, P('data', None)))
         builder = ClusterBuilder(mesh=mesh)

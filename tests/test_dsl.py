@@ -84,6 +84,43 @@ def test_cgpp_parser_rejects_malformed():
         parse_cgpp("x = 1\n")
 
 
+def test_cgpp_malformed_annotations_name_the_offending_line():
+    # //@emit without a host-ip (line 2)
+    with pytest.raises(SyntaxError, match=r"line 2: malformed annotation.*//@emit"):
+        parse_cgpp("x = 1\n//@emit\n//@cluster 2\n//@collect\n")
+    # //@cluster without a count (line 3)
+    with pytest.raises(SyntaxError, match=r"line 3: malformed annotation.*//@cluster"):
+        parse_cgpp("x = 1\n//@emit 1.2.3.4\n//@cluster\n//@collect\n")
+    # unknown annotation form
+    with pytest.raises(SyntaxError, match=r"line 1: malformed annotation.*//@emitter"):
+        parse_cgpp("//@emitter 1.2.3.4\n//@cluster 2\n//@collect\n")
+
+
+def test_cgpp_out_of_order_annotations_name_the_offending_line():
+    # //@cluster before //@emit: the parser points at the cluster line
+    with pytest.raises(SyntaxError, match=r"line 2: .*//@cluster.*must follow"):
+        parse_cgpp("x = 1\n//@cluster 2\n//@emit 1.2.3.4\n//@collect\n")
+    # //@collect before //@cluster
+    with pytest.raises(SyntaxError, match=r"line 3: .*//@collect.*must follow"):
+        parse_cgpp("x = 1\n//@emit 1.2.3.4\n//@collect\n//@cluster 2\n")
+
+
+def test_cgpp_duplicate_sections_name_the_offending_line():
+    with pytest.raises(SyntaxError, match=r"line 3: .*duplicate //@emit"):
+        parse_cgpp("//@emit 1.2.3.4\nx = 1\n//@emit 5.6.7.8\n//@cluster 2\n//@collect\n")
+    with pytest.raises(SyntaxError, match=r"line 4: .*duplicate //@cluster"):
+        parse_cgpp("//@emit 1.2.3.4\nx = 1\n//@cluster 2\n//@cluster 3\n//@collect\n")
+    with pytest.raises(SyntaxError, match=r"line 5: .*duplicate //@collect"):
+        parse_cgpp("//@emit 1.2.3.4\n//@cluster 2\nx = 1\n//@collect\n//@collect\n")
+
+
+def test_cgpp_missing_collect_section():
+    with pytest.raises(SyntaxError, match="missing //@collect"):
+        parse_cgpp("//@emit 1.2.3.4\n//@cluster 2\nx = 1\n")
+    with pytest.raises(SyntaxError, match="missing //@emit"):
+        parse_cgpp("x = 1\ny = 2\n")
+
+
 def test_spec_validation_catches_mismatched_fanin():
     spec = ClusterSpec.simple(
         host="h", nclusters=2, workers_per_node=2,
