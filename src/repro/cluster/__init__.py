@@ -11,15 +11,18 @@ real OS processes connected by sockets, with zero changes to user code —
 
 Modules (one per architectural role):
 
-* :mod:`repro.cluster.wire` — length-prefixed msgpack/pickle wire format with
-  a typed frame header (REGISTER/LOAD/WORK_REQUEST/WORK/RESULT/HEARTBEAT/UT);
+* :mod:`repro.cluster.wire` — length-prefixed msgpack/pickle/ndarray wire
+  format with a typed frame header (REGISTER/LOAD/WORK_REQUEST/WORK_BATCH/
+  RESULT_BATCH/HEARTBEAT/UT plus the legacy WORK/RESULT single forms);
 * :mod:`repro.cluster.netchannels` — socket-backed channel ends with the same
-  blocking one-place-buffer API as the threaded queues, so the protocol
-  model-checked by ``core.verify`` still describes the network;
+  blocking queue API as the threaded runtime, so the protocol model-checked
+  by ``core.verify`` still describes the network;
 * :mod:`repro.cluster.host_loader` — the Host-Node-Loader (registration,
-  code broadcast, the onrl server loop, collect, failure re-dispatch);
+  code broadcast, the credit-pipelined onrl server loop, collect, failure
+  re-dispatch);
 * :mod:`repro.cluster.node_loader` — the Node-Loader a worker machine runs
-  (register, load, request→compute→deliver, UT shutdown);
+  (register, boot-preload, load, windowed request→compute→batched deliver,
+  UT shutdown);
 * :mod:`repro.cluster.membership` — registry + heartbeat tracking feeding the
   ``runtime.failures`` detection thresholds;
 * :mod:`repro.cluster.spawn` — single-machine launcher forking N node-loader

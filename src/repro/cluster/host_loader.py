@@ -5,22 +5,28 @@ Bootstrap sequence (the load network):
 1. HNL listens on the configurable "port 2000" and waits for one REGISTER
    frame per expected node (many-to-one input channel — input end created
    before any output end exists, §4's ordering rule).
-2. HNL broadcasts the serialized deployment to every node on the LOAD frame —
-   the JCSP *code-loading channel* analogue (§4.1): the work function (and
-   any AOT-serialized executables) travel by value, so the host is the single
-   source of code.
-3. The application network (WORK_REQUEST/WORK/RESULT/UT) then runs the
-   demand-driven onrl/nrfa client-server protocol model-checked in
-   ``core.verify``: the host answers each node's request in finite time with
-   the next work object, or with UT once the emit stream is exhausted and
-   nothing is in flight.
-4. On UT each node returns its (load_ms, run_ms, items) timing record
-   (requirement 7) and the HNL folds results via the user's ResultDetails.
+2. As *each* node registers, the HNL immediately sends it the serialized
+   deployment on a LOAD frame — the JCSP *code-loading channel* analogue
+   (§4.1).  Early registrants therefore deserialize code and pull in heavy
+   imports while stragglers are still connecting, instead of the whole
+   cluster idling until the last REGISTER.
+3. The application network then runs the demand-driven onrl/nrfa
+   client-server protocol model-checked in ``core.verify``, pipelined:
+   a WORK_REQUEST carries a *credit count* and the host answers with up to
+   that many items in one WORK_BATCH frame; each RESULT_BATCH a node sends
+   both delivers results and (piggybacked ``credits``) re-requests that
+   many replacement items.  The CSP obligation is unchanged — every demand
+   is answered in finite time with items or, once the emit stream is
+   exhausted and nothing is in flight, with UT — the window is just wider
+   than one.
+4. On UT each node returns its (boot_ms, load_ms, run_ms, items) timing
+   record (requirement 7) and the HNL folds results via the user's
+   ResultDetails.
 
 Beyond the paper: heartbeat liveness (``membership``) — a node-loader that
 dies mid-job is detected by missed beats, its in-flight items re-queued and
-re-dispatched to surviving nodes, with result-id dedup guaranteeing no item
-is lost or double-collected.
+re-dispatched to surviving nodes (their parked credits answered first), with
+result-id dedup guaranteeing no item is lost or double-collected.
 
 Single-threaded protocol core: per-connection reader threads and a ticker
 only *enqueue* events; one dispatcher consumes them.  That makes the state
@@ -38,7 +44,7 @@ import time
 from dataclasses import dataclass
 from typing import Any
 
-from repro.cluster.membership import Membership
+from repro.cluster.membership import Membership, NodeRecord
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
     LOAD_WIRE_CHANNEL,
@@ -56,6 +62,11 @@ class HostStats:
     duplicates_dropped: int = 0
     redispatched: int = 0
     deaths_detected: int = 0
+    # Data-plane counters (credit pipeline).
+    work_requests: int = 0  # explicit WORK_REQUEST frames received
+    work_batches: int = 0  # WORK_BATCH frames sent
+    result_batches: int = 0  # RESULT/RESULT_BATCH frames received
+    max_batch: int = 0  # largest WORK_BATCH dispatched
 
 
 class WorkFunctionError(RuntimeError):
@@ -77,6 +88,9 @@ class HostLoader:
         job_timeout: float | None = None,
         slowdown: dict[str, float] | None = None,
         artifacts: dict[str, bytes] | None = None,
+        prefetch: int | None = None,
+        flush_items: int = 8,
+        flush_interval: float = 0.005,
     ):
         spec.validate()
         self.spec = spec
@@ -87,10 +101,14 @@ class HostLoader:
         self.job_timeout = job_timeout
         self.slowdown = dict(slowdown or {})
         self.artifacts = dict(artifacts or {})
+        self.prefetch = prefetch
+        self.flush_items = flush_items
+        self.flush_interval = flush_interval
         self.stats = HostStats()
         self.result: Any = None
 
         self._events: queue.Queue = queue.Queue()
+        self._early_events: list = []  # app frames arriving mid-bootstrap
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -155,7 +173,11 @@ class HostLoader:
 
         with self.timing.phase("host", "load"):
             self._await_registrations()
-            self._broadcast_load()
+        # Demand that raced the bootstrap (an early node finishing its LOAD
+        # while stragglers registered) re-enters the event stream here.
+        for ev in self._early_events:
+            self._events.put(ev)
+        self._early_events.clear()
 
         details = spec.host_net.emit.e_details
         emit_state = details.initial_state()
@@ -164,7 +186,6 @@ class HostLoader:
         pending: collections.deque = collections.deque()  # requeued (id, obj)
         inflight: dict[int, tuple[str, Any]] = {}
         done_ids: set[int] = set()
-        waiting: collections.deque = collections.deque()  # parked requests
         r_details = spec.host_net.collector.r_details
         acc = r_details.init()
 
@@ -182,18 +203,26 @@ class HostLoader:
             next_id += 1
             return item
 
-        def send_work(node_id: str, item) -> bool:
-            rec = self.membership.nodes[node_id]
-            item_id, obj = item
+        def send_batch(rec: NodeRecord, batch: list) -> bool:
             try:
                 rec.conn.send(Frame(
-                    FrameType.WORK, {"id": item_id, "obj": obj},
+                    FrameType.WORK_BATCH,
+                    {"items": [{"id": i, "obj": o} for i, o in batch]},
                     APP_WIRE_CHANNEL,
                 ))
-            except (OSError, ValueError):
-                pending.appendleft(item)  # never lose an item on a dead pipe
+            except OSError:
+                # Never lose an item on a dead pipe: all of them go back to
+                # the front of the queue; the node itself is reaped shortly.
+                # Encode errors (ValueError: unencodable/oversized payload)
+                # are a *user payload* problem, not a node death — requeueing
+                # would loop forever, so they propagate and fail the job.
+                for item in reversed(batch):
+                    pending.appendleft(item)
                 return False
-            inflight[item_id] = (node_id, obj)
+            for item_id, obj in batch:
+                inflight[item_id] = (rec.node_id, obj)
+            self.stats.work_batches += 1
+            self.stats.max_batch = max(self.stats.max_batch, len(batch))
             return True
 
         def send_ut(node_id: str) -> None:
@@ -203,24 +232,35 @@ class HostLoader:
             except (OSError, ValueError):
                 pass
 
-        def answer(node_id: str) -> None:
-            """Answer one WORK_REQUEST (the onrl server obligation)."""
+        def answer(node_id: str, credits: int) -> None:
+            """Answer demand (the onrl server obligation), up to ``credits``
+            + any previously parked credits, in one WORK_BATCH."""
             rec = self.membership.nodes.get(node_id)
             if rec is None or not rec.alive:
                 return
-            item = next_item()
-            if item is not None:
-                if not send_work(node_id, item):
-                    waiting.append(node_id)  # retried once the node is reaped
+            want = credits + rec.credits
+            rec.credits = 0
+            if want <= 0:
                 return
-            if emit_done and not inflight:
-                send_ut(node_id)
-            else:
-                waiting.append(node_id)  # emit drained but items in flight
+            batch = []
+            while len(batch) < want:
+                item = next_item()
+                if item is None:
+                    break
+                batch.append(item)
+            if batch and not send_batch(rec, batch):
+                return  # dead pipe: items requeued, node about to be reaped
+            leftover = want - len(batch)
+            if leftover:
+                if emit_done and not inflight and not pending:
+                    send_ut(node_id)
+                else:
+                    rec.credits = leftover  # parked until items reappear
 
         def flush_waiting() -> None:
-            for _ in range(len(waiting)):
-                answer(waiting.popleft())
+            for rec in list(self.membership.nodes.values()):
+                if rec.alive and rec.credits > 0:
+                    answer(rec.node_id, 0)
 
         def reap(now: float | None = None) -> None:
             newly_dead = self.membership.reap(now, at_item=len(done_ids))
@@ -232,10 +272,35 @@ class HostLoader:
                     _, obj = inflight.pop(iid)
                     pending.append((iid, obj))
                     self.stats.redispatched += 1
-                # A parked request from a dead node can never be answered.
-                while rec.node_id in waiting:
-                    waiting.remove(rec.node_id)
             if newly_dead:
+                flush_waiting()
+
+        def collect_results(node_id: str, results: list, credits: int) -> None:
+            nonlocal acc
+            self.stats.result_batches += 1
+            for p in results:
+                if "error" in p:
+                    raise WorkFunctionError(
+                        f"work function raised on {node_id} for item "
+                        f"{p['id']}: {p['error']}\n"
+                        f"{p.get('traceback', '')}"
+                    )
+                # Always clear inflight — a redispatched item can complete
+                # twice (zombie result + survivor result) and both entries
+                # must go or termination stalls.
+                inflight.pop(p["id"], None)
+                if p["id"] in done_ids:
+                    self.stats.duplicates_dropped += 1
+                else:
+                    done_ids.add(p["id"])
+                    acc = r_details.collect(acc, p["value"])
+                    self.stats.items_total += 1
+                    rec = self.membership.nodes[node_id]
+                    rec.items_done += 1
+                    self.timing.count_item(node_id)
+            if credits:
+                answer(node_id, credits)
+            if emit_done and not inflight and not pending:
                 flush_waiting()
 
         with self.timing.phase("host", "run"):
@@ -259,34 +324,24 @@ class HostLoader:
                 if kind == "frame":
                     _, node_id, frame = event
                     if frame.ftype is FrameType.WORK_REQUEST:
-                        answer(node_id)
-                    elif frame.ftype is FrameType.RESULT:
+                        self.stats.work_requests += 1
+                        p = frame.payload or {}
+                        answer(node_id, int(p.get("credits", 1)))
+                    elif frame.ftype is FrameType.RESULT_BATCH:
                         p = frame.payload
-                        if "error" in p:
-                            raise WorkFunctionError(
-                                f"work function raised on {node_id} for item "
-                                f"{p['id']}: {p['error']}\n"
-                                f"{p.get('traceback', '')}"
-                            )
-                        # Always clear inflight — a redispatched item can
-                        # complete twice (zombie result + survivor result)
-                        # and both entries must go or termination stalls.
-                        inflight.pop(p["id"], None)
-                        if p["id"] in done_ids:
-                            self.stats.duplicates_dropped += 1
-                        else:
-                            done_ids.add(p["id"])
-                            acc = r_details.collect(acc, p["value"])
-                            self.stats.items_total += 1
-                            rec = self.membership.nodes[node_id]
-                            rec.items_done += 1
-                            self.timing.count_item(node_id)
-                        if emit_done and not inflight and not pending:
-                            flush_waiting()
+                        collect_results(
+                            node_id, p["results"], int(p.get("credits", 0))
+                        )
+                    elif frame.ftype is FrameType.RESULT:
+                        # Legacy single-result form (one frame per item).
+                        collect_results(node_id, [frame.payload], 0)
                     elif frame.ftype is FrameType.HEARTBEAT:
                         self.membership.beat(node_id)
                     elif frame.ftype is FrameType.UT:
                         self._node_finished(node_id, frame.payload)
+                elif kind == "loaded":
+                    # A straggler's LOAD send completing after bootstrap.
+                    self._apply_load_result(event[1], event[2])
                 elif kind == "tick":
                     reap()
                 elif kind == "disconnect":
@@ -304,6 +359,7 @@ class HostLoader:
                         f"({len(inflight)} in flight, {len(pending)} queued)"
                     )
 
+        self._collect_wire_stats()
         self.result = r_details.finalise(acc)
         return self.result
 
@@ -323,19 +379,26 @@ class HostLoader:
                 event = self._events.get(timeout=remaining)
             except queue.Empty:
                 continue
+            if event[0] == "loaded":
+                self._apply_load_result(event[1], event[2])
+                continue
             if event[0] == "frame":
                 # Early heartbeats (nodes beat from REGISTER onwards) must
                 # count, or a node registering early could be declared dead
-                # while the stragglers are still connecting.
+                # while the stragglers are still connecting.  Other early
+                # frames (a loaded node's first WORK_REQUEST) are replayed
+                # into the dispatcher once bootstrap completes.
                 _, node_id, frame = event
                 if frame.ftype is FrameType.HEARTBEAT:
                     self.membership.beat(node_id)
+                else:
+                    self._early_events.append(event)
                 continue
             if event[0] != "register":
                 continue  # pre-bootstrap noise
             _, node_id, addr, conn, payload = event
             try:
-                self.membership.register(
+                rec = self.membership.register(
                     node_id, addr,
                     cores=int(payload.get("cores", 1)),
                     pid=int(payload.get("pid", 0)),
@@ -343,35 +406,86 @@ class HostLoader:
                 )
             except ValueError:
                 conn.close()  # duplicate node_id: reject it, keep waiting
-
-    def _broadcast_load(self) -> None:
-        for rec in self.membership.alive_nodes():
-            try:
-                rec.conn.send(Frame(
-                    FrameType.LOAD,
-                    {
-                        "node_id": rec.node_id,
-                        "workers": self.spec.workers_per_node,
-                        "function": self.spec.node_net.group.function,
-                        "heartbeat_interval": self.membership.monitor.interval_s,
-                        "slowdown": float(self.slowdown.get(rec.node_id, 0.0)),
-                        "artifacts": self.artifacts,
-                    },
-                    LOAD_WIRE_CHANNEL,
-                ))
-            except (OSError, ValueError):
-                # Died between REGISTER and LOAD: a bootstrap-time node
-                # loss, handled like any other — survivors run the job.
-                self.membership.mark_dead(rec.node_id)
-                self.stats.deaths_detected += 1
                 continue
-            self.membership.mark_loaded(rec.node_id)
+            # Overlapped load: ship code the moment a node shows up, so its
+            # deserialization/imports run while stragglers still register.
+            self._send_load(rec)
+
+    def _send_load(self, rec: NodeRecord) -> None:
+        """Ship the deployment to one node from a dedicated sender thread.
+
+        A node booting heavy deps drains its socket only once its preloader
+        finishes; a large LOAD (MBs of artifacts) would therefore block a
+        synchronous send past the kernel buffer — and block the dispatcher
+        with it, re-serializing the very bootstrap the overlap parallelizes.
+        The sender thread reports back through the event queue
+        (``("loaded", node_id, ok)``) so membership stays single-writer.
+        """
+        payload = {
+            "node_id": rec.node_id,
+            "workers": self.spec.workers_per_node,
+            "function": self.spec.node_net.group.function,
+            "heartbeat_interval": self.membership.monitor.interval_s,
+            "slowdown": float(self.slowdown.get(rec.node_id, 0.0)),
+            "artifacts": self.artifacts,
+            "prefetch": self.prefetch,
+            "flush_items": self.flush_items,
+            "flush_interval": self.flush_interval,
+        }
+
+        def sender() -> None:
+            try:
+                rec.conn.send(Frame(FrameType.LOAD, payload, LOAD_WIRE_CHANNEL))
+            except Exception:
+                # Dead pipe or an unserializable deployment: either way the
+                # node can never load — report it so it is marked dead
+                # (unloadable everywhere -> "all node-loaders died") rather
+                # than leaving the job to idle until job_timeout.
+                self._events.put(("loaded", rec.node_id, False))
+                return
+            self._events.put(("loaded", rec.node_id, True))
+
+        t = threading.Thread(target=sender, name=f"hnl-load-{rec.node_id}",
+                             daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _apply_load_result(self, node_id: str, ok: bool) -> None:
+        rec = self.membership.nodes.get(node_id)
+        if ok:
+            if rec is not None and rec.alive:  # never resurrect a reaped node
+                self.membership.mark_loaded(node_id)
+            return
+        # Died between REGISTER and LOAD: a bootstrap-time node loss,
+        # handled like any other — survivors run the job.
+        if self.membership.mark_dead(node_id) is not None:
+            self.stats.deaths_detected += 1
 
     def _node_finished(self, node_id: str, payload: Any) -> None:
         timing = payload or {}
         self.membership.mark_done(node_id, timing)
+        self.timing.add(node_id, "boot", float(timing.get("boot_ms", 0.0)))
         self.timing.add(node_id, "load", float(timing.get("load_ms", 0.0)))
         self.timing.add(node_id, "run", float(timing.get("run_ms", 0.0)))
+
+    def _collect_wire_stats(self) -> None:
+        """Fold per-connection traffic counters + protocol counters into the
+        timing collector (reported by benchmarks/run.py)."""
+        agg = {"bytes_sent": 0, "bytes_recv": 0,
+               "frames_sent": 0, "frames_recv": 0}
+        for rec in self.membership.nodes.values():
+            if rec.conn is None:
+                continue
+            for key, val in rec.conn.counters.as_dict().items():
+                agg[key] += val
+        agg["work_requests"] = self.stats.work_requests
+        agg["work_batches"] = self.stats.work_batches
+        agg["result_batches"] = self.stats.result_batches
+        agg["max_batch"] = self.stats.max_batch
+        # One round-trip = one host-bound demand frame (explicit request or
+        # piggybacked result batch) plus its answer.
+        agg["round_trips"] = self.stats.work_requests + self.stats.result_batches
+        self.timing.add_wire(**agg)
 
     # -- teardown -----------------------------------------------------------
 

@@ -42,6 +42,10 @@ class NodeRecord:
     last_beat: float = 0.0
     beats: int = 0
     items_done: int = 0
+    # Outstanding demand the host could not satisfy yet (credit-based
+    # pipelining): credits the node sent that are parked until new items
+    # appear (re-dispatch) or the job terminates (answered with UT).
+    credits: int = 0
     timing: dict[str, Any] = field(default_factory=dict)
     conn: Any = None  # FrameConnection; opaque to this module
 
@@ -98,6 +102,7 @@ class Membership:
         if rec is None or rec.state == DEAD:
             return None
         rec.state = DEAD
+        rec.credits = 0  # a dead node's parked demand can never be answered
         ev = FailureEvent(step=at_item, kind="node_loss", node=rec.index)
         self.failures.append(ev)
         return ev

@@ -6,38 +6,50 @@ count) arrives over the load network.  Mirroring that:
 
     python -m repro.cluster.node_loader --host 127.0.0.1 --port <p>
 
-Lifecycle (timed per requirement 7 — load vs run accounted separately):
+Lifecycle (timed per requirement 7, split three ways):
 
-1. connect + REGISTER (node id, cores, pid) on the load channel;
-2. receive LOAD: the deployment payload (work function shipped by value —
-   the code-loading channel; optional AOT-serialized executables land in
-   :data:`ARTIFACTS` for work functions that want them);
-3. start the heartbeat beacon and the node-local Figure-2 fragment:
-   the nrfa client (one-place buffer: request only after the previous object
-   was handed to an idle worker) + ``workers`` worker threads + result
-   delivery (the afoc merge is the shared, locked socket);
-4. on UT: flood workers with UT, join them, return (load_ms, run_ms, items)
-   to the host in a final UT frame, exit 0.
+1. *boot*: connect + REGISTER (node id, cores, pid) on the load channel
+   while a background thread pre-imports heavy dependencies named on the
+   command line (``--preload jax.numpy``) — the environment cost of the
+   workstation, accounted separately from code distribution;
+2. *load*: receive LOAD — the deployment payload (work function shipped by
+   value over the code-loading channel; optional AOT-serialized executables
+   land in :data:`ARTIFACTS`).  Deserialization is deferred until the
+   preloader finishes so shipped-code imports hit a warm module cache
+   instead of serializing on the import lock inside the load window;
+3. *run*: the node-local Figure-2 fragment, pipelined.  The nrfa client
+   keeps a *window* of ``workers + prefetch`` items resident: one initial
+   WORK_REQUEST carries ``credits=window``, the host answers with a
+   WORK_BATCH, and every RESULT_BATCH the flusher sends piggybacks
+   ``credits=len(results)`` — each completed item frees a window slot, so
+   demand travels with delivery and workers never idle on a round-trip.
+   Results coalesce in a small buffer flushed on a threshold or a few-ms
+   interval instead of one frame + one syscall per item;
+4. on UT: flood workers with UT, join them, return
+   (boot_ms, load_ms, run_ms, items) to the host in a final UT frame,
+   exit 0.
 
 This module must import without jax — a node-loader on a fresh workstation
 is a bare bootstrap; the shipped code pulls in its own dependencies when
-deserialized.
+deserialized (or earlier, via ``--preload``).
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
 import queue
 import socket
 import threading
 import time
 import traceback
-from typing import Any
+from typing import Any, Sequence
 
 from repro.cluster.netchannels import ChannelClosed, ChannelMux
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
+    DEFAULT_HEARTBEAT_S,
     LOAD_WIRE_CHANNEL,
     UT,
     Frame,
@@ -56,18 +68,37 @@ def run_node(
     *,
     node_id: str | None = None,
     connect_timeout: float = 30.0,
+    preload: Sequence[str] = (),
 ) -> dict[str, Any]:
     """Run one Node-Loader to completion; returns its timing record."""
     node_id = node_id or f"{socket.gethostname()}-{os.getpid()}"
-    t_load0 = time.perf_counter()
+    t_boot0 = time.perf_counter()
+
+    # Heavy dependencies import concurrently with registration: the cost of
+    # booting the environment lands in boot_ms, not in the code-distribution
+    # (load) window the paper accounts in §8.2.
+    def preloader() -> None:
+        for name in preload:
+            try:
+                importlib.import_module(name)
+            except Exception:  # the shipped code will surface a real error
+                pass
+
+    preload_thread = threading.Thread(target=preloader, name="nl-preload",
+                                      daemon=True)
+    preload_thread.start()
 
     sock = socket.create_connection((host, port), timeout=connect_timeout)
     sock.settimeout(None)
     conn = FrameConnection(sock)
     mux = ChannelMux(conn)
+    # Inboxes exist before we announce ourselves (§4 ordering: input ends
+    # before output ends).  The reader *thread* starts only after the
+    # preloader joins — decoding LOAD pulls in the shipped code's imports,
+    # and those must not contend with the preloader inside the load window;
+    # meanwhile inbound frames simply wait in the kernel socket buffer.
     load_ch = mux.open(LOAD_WIRE_CHANNEL, FrameType.LOAD, maxsize=4)
-    app_ch = mux.open(APP_WIRE_CHANNEL, FrameType.WORK, maxsize=1)
-    mux.start()  # input ends exist before we announce ourselves (§4 ordering)
+    app_ch = mux.open(APP_WIRE_CHANNEL, FrameType.WORK_BATCH, maxsize=64)
 
     conn.send(Frame(
         FrameType.REGISTER,
@@ -75,12 +106,11 @@ def run_node(
         LOAD_WIRE_CHANNEL,
     ))
 
-    # The beacon starts *before* the LOAD payload is deserialized: shipped
-    # code may drag in heavy imports (jax), and the host must not mistake
-    # that load phase for death.  The interval is refined once the plan says
-    # what the host expects.
+    # The beacon starts right after REGISTER: the boot/load phases may take
+    # seconds (jax import), and the host must not mistake them for death.
+    # The interval is refined once the plan says what the host expects.
     stop_beat = threading.Event()
-    beat_interval = [0.1]
+    beat_interval = [DEFAULT_HEARTBEAT_S]
 
     def heartbeat() -> None:
         while not stop_beat.wait(beat_interval[0]):
@@ -96,6 +126,11 @@ def run_node(
                                    daemon=True)
     beat_thread.start()
 
+    preload_thread.join()
+    boot_ms = (time.perf_counter() - t_boot0) * 1e3
+    t_load0 = time.perf_counter()
+    mux.start()
+
     try:
         plan = load_ch.get(timeout=connect_timeout)
     except queue.Empty:
@@ -108,19 +143,80 @@ def run_node(
     if plan is UT:  # host aborted during bootstrap
         stop_beat.set()
         conn.close()
-        return {"node_id": node_id, "load_ms": 0.0, "run_ms": 0.0, "items": 0}
+        return {"node_id": node_id, "boot_ms": round(boot_ms, 3),
+                "load_ms": 0.0, "run_ms": 0.0, "items": 0}
     fn = plan["function"]
     workers = int(plan["workers"])
     slowdown = float(plan.get("slowdown", 0.0))
-    beat_interval[0] = float(plan.get("heartbeat_interval", 0.2))
+    beat_interval[0] = float(
+        plan.get("heartbeat_interval", DEFAULT_HEARTBEAT_S)
+    )
+    prefetch = plan.get("prefetch")
+    # None = one extra per worker; 0 is honoured (strict one-item-per-worker
+    # window, the pure demand-driven pre-pipelining behaviour).
+    prefetch = workers if prefetch is None else max(0, int(prefetch))
+    window = workers + prefetch
+    flush_items = max(1, int(plan.get("flush_items", 8)))
+    flush_interval = float(plan.get("flush_interval", 0.005))
     ARTIFACTS.clear()
     ARTIFACTS.update(plan.get("artifacts") or {})
     load_ms = (time.perf_counter() - t_load0) * 1e3
 
-    # -- the node-local Figure-2 fragment -----------------------------------
-    work_q: queue.Queue = queue.Queue(maxsize=1)  # the nrfa one-place buffer
+    # -- the node-local Figure-2 fragment, pipelined -------------------------
+    # Buffering is bounded by the credit window, not by queue capacity: the
+    # host never holds more than `window` items against this node.
+    work_q: queue.Queue = queue.Queue()
     items_done = 0
     items_lock = threading.Lock()
+
+    out_lock = threading.Lock()
+    out_buf: list[dict] = []
+    flush_now = threading.Event()
+    stop_flush = threading.Event()
+
+    def complete(result: dict, urgent: bool = False) -> None:
+        with out_lock:
+            out_buf.append(result)
+            n = len(out_buf)
+        if urgent or n >= flush_items:
+            flush_now.set()
+
+    def flush() -> None:
+        with out_lock:
+            if not out_buf:
+                return
+            batch, out_buf[:] = list(out_buf), []
+        payload = {"node_id": node_id, "results": batch,
+                   # Each finished item frees one window slot: demand
+                   # piggybacks on delivery (no separate request frame).
+                   "credits": len(batch)}
+        try:
+            conn.send(Frame(FrameType.RESULT_BATCH, payload, APP_WIRE_CHANNEL))
+        except OSError:
+            pass  # host gone: the nrfa loop shuts the node down
+        except Exception as exc:
+            # A result refused to serialize: report instead of stalling the
+            # job with a silently dead flusher (the host fails fast).
+            try:
+                conn.send(Frame(
+                    FrameType.RESULT_BATCH,
+                    {"node_id": node_id, "credits": len(batch),
+                     "results": [{
+                         "id": batch[0]["id"],
+                         "error": f"{type(exc).__name__}: {exc}",
+                         "traceback": traceback.format_exc(),
+                     }]},
+                    APP_WIRE_CHANNEL,
+                ))
+            except OSError:
+                pass
+
+    def flusher() -> None:
+        while not stop_flush.is_set():
+            flush_now.wait(flush_interval)
+            flush_now.clear()
+            flush()
+        flush()  # drain the tail after the workers joined
 
     def worker() -> None:
         nonlocal items_done
@@ -132,27 +228,15 @@ def run_node(
                 value = fn(item["obj"])
                 if slowdown > 0.0:
                     time.sleep(slowdown)  # injected straggler (§6.1 testing)
-                # Inside the try: an unserialisable result must be reported
-                # too, not silently kill the thread.
-                conn.send(Frame(
-                    FrameType.RESULT,
-                    {"id": item["id"], "value": value, "node_id": node_id},
-                    APP_WIRE_CHANNEL,
-                ))
+                complete({"id": item["id"], "value": value})
             except BaseException as exc:
                 # Report instead of dying silently: a dead worker thread
                 # would stall the node (heartbeats keep flowing, so the
                 # host would never re-dispatch).  The host fails the job.
-                try:
-                    conn.send(Frame(
-                        FrameType.RESULT,
-                        {"id": item["id"], "node_id": node_id,
-                         "error": f"{type(exc).__name__}: {exc}",
-                         "traceback": traceback.format_exc()},
-                        APP_WIRE_CHANNEL,
-                    ))
-                except OSError:
-                    pass  # socket gone: the nrfa loop shuts the node down
+                complete({"id": item["id"],
+                          "error": f"{type(exc).__name__}: {exc}",
+                          "traceback": traceback.format_exc()},
+                         urgent=True)
                 continue
             with items_lock:
                 items_done += 1
@@ -163,18 +247,31 @@ def run_node(
     ]
     for t in worker_threads:
         t.start()
+    flush_thread = threading.Thread(target=flusher, name="nl-flusher",
+                                    daemon=True)
+    flush_thread.start()
 
     t_run0 = time.perf_counter()
     try:
-        while True:  # the nrfa client loop (b!i.S ; c?i.o ; d!i.o)
-            conn.send(Frame(FrameType.WORK_REQUEST, {"node_id": node_id},
-                            APP_WIRE_CHANNEL))
-            obj = app_ch.get()
-            if obj is UT:
+        # The windowed nrfa client: one up-front demand for the whole
+        # window, then WORK_BATCH frames fill it and RESULT_BATCH credits
+        # (sent by the flusher) keep it full.
+        conn.send(Frame(
+            FrameType.WORK_REQUEST,
+            {"node_id": node_id, "credits": window},
+            APP_WIRE_CHANNEL,
+        ))
+        while True:
+            msg = app_ch.get()
+            if msg is UT:
                 for _ in range(workers):
                     work_q.put(UT)
                 break
-            work_q.put(obj)  # blocks until a worker idles — then re-request
+            items = (msg["items"]
+                     if isinstance(msg, dict) and "items" in msg
+                     else [msg])  # legacy single-WORK frame
+            for item in items:
+                work_q.put(item)
     except (ChannelClosed, OSError):
         # Host vanished (mid-recv or mid-request-send): there is nobody to
         # deliver to; shut down quietly.
@@ -182,11 +279,15 @@ def run_node(
             work_q.put(UT)
     for t in worker_threads:
         t.join()
+    stop_flush.set()
+    flush_now.set()
+    flush_thread.join()
     run_ms = (time.perf_counter() - t_run0) * 1e3
     stop_beat.set()
 
     record = {
         "node_id": node_id,
+        "boot_ms": round(boot_ms, 3),
         "load_ms": round(load_ms, 3),
         "run_ms": round(run_ms, 3),
         "items": items_done,
@@ -209,12 +310,19 @@ def main(argv: list[str] | None = None) -> int:
                         help="load network port (the paper's 2000)")
     parser.add_argument("--node-id", default=None)
     parser.add_argument("--connect-timeout", type=float, default=30.0)
+    parser.add_argument(
+        "--preload", default="",
+        help="comma-separated modules to import during boot, overlapping "
+             "registration (e.g. 'jax.numpy')",
+    )
     args = parser.parse_args(argv)
+    preload = tuple(m for m in args.preload.split(",") if m)
     try:
         record = run_node(
             args.host, args.port,
             node_id=args.node_id,
             connect_timeout=args.connect_timeout,
+            preload=preload,
         )
     except (ConnectionError, socket.timeout, OSError) as exc:
         print(

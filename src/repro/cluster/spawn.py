@@ -29,22 +29,40 @@ from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor
 
 
-def _child_env() -> dict[str, str]:
+def _child_env(compile_cache_dir: str | None = None) -> dict[str, str]:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
     # Node-loaders are bootstrap processes: keep their (transitive) jax happy
     # on CPU-only machines and their thread pools small.
     env.setdefault("JAX_PLATFORMS", "cpu")
+    if compile_cache_dir:
+        # Cluster-wide XLA compilation cache: the host's warm-up compile
+        # lands on disk and every node-loader loads the binary instead of
+        # recompiling — the paper's single-source code-shipping idea applied
+        # to executables.
+        env["JAX_COMPILATION_CACHE_DIR"] = compile_cache_dir
+        env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
     return env
 
 
 def spawn_node_loader(host: str, port: int, node_id: str,
-                      *, python: str = sys.executable) -> subprocess.Popen:
-    """Start one Node-Loader subprocess (the §4 'identical executable')."""
+                      *, python: str = sys.executable,
+                      preload: tuple[str, ...] = (),
+                      compile_cache_dir: str | None = None
+                      ) -> subprocess.Popen:
+    """Start one Node-Loader subprocess (the §4 'identical executable').
+
+    ``preload`` names modules the child imports concurrently with its
+    registration (e.g. ``("jax.numpy",)``), so heavy environment boot
+    overlaps the load-network handshake instead of serializing after it.
+    """
+    cmd = [python, "-m", "repro.cluster.node_loader",
+           "--host", host, "--port", str(port), "--node-id", node_id]
+    if preload:
+        cmd += ["--preload", ",".join(preload)]
     return subprocess.Popen(
-        [python, "-m", "repro.cluster.node_loader",
-         "--host", host, "--port", str(port), "--node-id", node_id],
-        env=_child_env(),
+        cmd,
+        env=_child_env(compile_cache_dir),
         stdout=subprocess.PIPE,
         stderr=subprocess.PIPE,
         text=True,
@@ -74,6 +92,17 @@ class ProcessClusterApplication:
     shutdown_grace: float = 10.0
     slowdown: dict[str, float] = field(default_factory=dict)
     artifacts: dict[str, bytes] = field(default_factory=dict)
+    # Data-plane knobs (see ARCHITECTURE.md "Data plane"): modules each
+    # node pre-imports during boot; extra items beyond `workers` the node
+    # keeps buffered (None = one per worker); and the node-side result
+    # coalescing threshold/interval.
+    preload: tuple[str, ...] = ()
+    prefetch: int | None = None
+    flush_items: int = 8
+    flush_interval: float = 0.005
+    # Directory for a shared XLA compilation cache (host warms it, nodes
+    # load instead of recompiling).  None = no persistent cache.
+    compile_cache_dir: str | None = None
 
     host_loader: HostLoader | None = None
     processes: dict[str, subprocess.Popen] = field(default_factory=dict)
@@ -103,10 +132,17 @@ class ProcessClusterApplication:
             job_timeout=self.job_timeout,
             slowdown=self.slowdown,
             artifacts=self.artifacts,
+            prefetch=self.prefetch,
+            flush_items=self.flush_items,
+            flush_interval=self.flush_interval,
         )
         self.host_loader.start()
         for node_id in self.node_ids():
-            proc = spawn_node_loader("127.0.0.1", self.host_loader.port, node_id)
+            proc = spawn_node_loader(
+                "127.0.0.1", self.host_loader.port, node_id,
+                preload=tuple(self.preload),
+                compile_cache_dir=self.compile_cache_dir,
+            )
             self.processes[node_id] = proc
             self.node_logs[node_id] = collections.deque(maxlen=200)
             for stream in (proc.stdout, proc.stderr):

@@ -270,6 +270,11 @@ class ClusterBuilder:
           (``repro.cluster``).  ``backend_options`` are forwarded to
           :class:`repro.cluster.spawn.ProcessClusterApplication` (e.g.
           ``port=0``, ``slowdown={node_id: seconds_per_item}``).
+          One transport caveat: ndarray payloads cross the wire on a
+          zero-copy codec and arrive as *read-only* views — a work
+          function that mutates its input in place must ``np.copy`` it
+          first (the threads backend hands over the original, writable
+          array).
 
         Runtimes are imported lazily to keep core dependency-free.
         """

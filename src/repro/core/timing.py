@@ -7,6 +7,17 @@ timings to the host, which combines them with its own and prints the table
 (paper §4, §8.2: load time was linear in the node count, 132.5 +/- 2.5 ms per
 node, and under 1% of total run time).
 
+Beyond the paper we account a third phase, *boot*: the cost of standing up a
+node's environment (interpreter start, heavy-dependency imports) before any
+code distribution happens.  The paper's workstations pre-exist with a warm
+JVM, so §8.2's ~132 ms/node load figure excludes it; splitting boot out keeps
+our load numbers comparable.
+
+The collector also aggregates *wire counters* — bytes/frames/round-trips the
+cluster transport moved per run — fed by the host loader and reported by
+``benchmarks/run.py`` so data-plane regressions are visible as counts, not
+just seconds.
+
 This module is runtime-agnostic: the local threaded runtime, the SPMD
 executor and the dry-run all record into the same structure.
 """
@@ -16,7 +27,10 @@ from __future__ import annotations
 import json
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+
+_PHASES = ("boot", "load", "run")
 
 
 @dataclass
@@ -24,6 +38,7 @@ class NodeTiming:
     """Timing record for a single (logical) node."""
 
     node_id: str
+    boot_ms: float = 0.0
     load_ms: float = 0.0
     run_ms: float = 0.0
     items: int = 0
@@ -31,6 +46,7 @@ class NodeTiming:
     def as_dict(self) -> dict:
         return {
             "node_id": self.node_id,
+            "boot_ms": round(self.boot_ms, 3),
             "load_ms": round(self.load_ms, 3),
             "run_ms": round(self.run_ms, 3),
             "items": self.items,
@@ -38,7 +54,7 @@ class NodeTiming:
 
 
 class TimingCollector:
-    """Thread-safe collector of per-node load/run timings.
+    """Thread-safe collector of per-node boot/load/run timings.
 
     Usage::
 
@@ -53,6 +69,7 @@ class TimingCollector:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._nodes: dict[str, NodeTiming] = {}
+        self._wire: dict[str, float] = {}
 
     def node(self, node_id: str) -> NodeTiming:
         with self._lock:
@@ -61,22 +78,38 @@ class TimingCollector:
             return self._nodes[node_id]
 
     def phase(self, node_id: str, kind: str) -> "_PhaseTimer":
-        if kind not in ("load", "run"):
-            raise ValueError(f"phase kind must be 'load' or 'run', got {kind!r}")
+        if kind not in _PHASES:
+            raise ValueError(
+                f"phase kind must be one of {_PHASES}, got {kind!r}"
+            )
         return _PhaseTimer(self, node_id, kind)
 
     def add(self, node_id: str, kind: str, ms: float) -> None:
+        if kind not in _PHASES:
+            raise ValueError(
+                f"phase kind must be one of {_PHASES}, got {kind!r}"
+            )
         rec = self.node(node_id)
         with self._lock:
-            if kind == "load":
-                rec.load_ms += ms
-            else:
-                rec.run_ms += ms
+            setattr(rec, f"{kind}_ms", getattr(rec, f"{kind}_ms") + ms)
 
     def count_item(self, node_id: str, n: int = 1) -> None:
         rec = self.node(node_id)
         with self._lock:
             rec.items += n
+
+    # -- wire counters ------------------------------------------------------
+
+    def add_wire(self, **counts: float) -> None:
+        """Accumulate wire-level counters (bytes/frames/round-trips)."""
+        with self._lock:
+            for key, val in counts.items():
+                self._wire[key] = self._wire.get(key, 0) + val
+
+    @property
+    def wire(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._wire)
 
     # -- reporting ---------------------------------------------------------
 
@@ -84,6 +117,9 @@ class TimingCollector:
     def nodes(self) -> list[NodeTiming]:
         with self._lock:
             return sorted(self._nodes.values(), key=lambda r: r.node_id)
+
+    def total_boot_ms(self) -> float:
+        return sum(n.boot_ms for n in self.nodes)
 
     def total_load_ms(self) -> float:
         return sum(n.load_ms for n in self.nodes)
@@ -99,15 +135,23 @@ class TimingCollector:
         return load / denom if denom > 0 else 0.0
 
     def report(self) -> str:
-        lines = [f"{'node':<16}{'load_ms':>12}{'run_ms':>14}{'items':>8}"]
+        lines = [
+            f"{'node':<16}{'boot_ms':>12}{'load_ms':>12}{'run_ms':>14}"
+            f"{'items':>8}"
+        ]
         for rec in self.nodes:
             lines.append(
-                f"{rec.node_id:<16}{rec.load_ms:>12.3f}{rec.run_ms:>14.3f}"
-                f"{rec.items:>8d}"
+                f"{rec.node_id:<16}{rec.boot_ms:>12.3f}{rec.load_ms:>12.3f}"
+                f"{rec.run_ms:>14.3f}{rec.items:>8d}"
             )
         lines.append(
             f"load fraction of total: {100.0 * self.load_fraction():.3f}%"
         )
+        wire = self.wire
+        if wire:
+            lines.append(
+                "wire: " + " ".join(f"{k}={wire[k]:.0f}" for k in sorted(wire))
+            )
         return "\n".join(lines)
 
     def as_json(self) -> str:

@@ -13,6 +13,15 @@ import statistics
 from dataclasses import dataclass, field
 from typing import Literal
 
+# The node beacon and the host threshold share one default interval so
+# neither side beats at a rate the other does not expect.  Guarded so the
+# runtime layer stays usable if the cluster transport (or its optional
+# deps) is ever stripped from a deployment.
+try:
+    from repro.cluster.wire import DEFAULT_HEARTBEAT_S
+except ImportError:  # pragma: no cover - cluster package absent
+    DEFAULT_HEARTBEAT_S = 0.2
+
 FailureKind = Literal["crash", "node_loss", "straggler"]
 
 
@@ -57,7 +66,7 @@ class HeartbeatMonitor:
     exercise in the SPMD executor.
     """
 
-    interval_s: float = 0.2
+    interval_s: float = DEFAULT_HEARTBEAT_S
     misses: int = 5
 
     @property

@@ -288,6 +288,90 @@ def test_work_function_exception_fails_job_with_node_traceback():
     assert app.orphaned() == []
 
 
+def test_pipelined_dispatch_batches_frames_and_counts_wire_traffic():
+    """The credit pipeline must move N items in far fewer than the 3N frames
+    of the one-item-per-round-trip protocol (request + work + result each),
+    and the host must fold wire counters into the timing collector."""
+
+    def work(x):
+        return x + 1
+
+    n_items = 200
+    builder = ClusterBuilder()
+    app = builder.build_application(
+        _spec(2, 2, n_items, work), backend="cluster", job_timeout=120.0,
+        flush_items=16, **FAST
+    )
+    assert app.run() == sum(i + 1 for i in range(n_items))
+
+    stats = app.host_loader.stats
+    assert stats.items_total == n_items
+    # Items travelled in batches, not one frame each...
+    assert stats.work_batches < n_items
+    assert stats.result_batches < n_items
+    assert stats.max_batch > 1
+    # ...and each node issued one explicit windowed request; all other
+    # demand piggybacked on result deliveries.
+    assert stats.work_requests == 2
+
+    wire_counts = builder.timing.wire
+    assert wire_counts["bytes_sent"] > 0 and wire_counts["bytes_recv"] > 0
+    assert wire_counts["round_trips"] == (
+        stats.work_requests + stats.result_batches
+    )
+    # The app channel moved well under 2 host-bound frames per item
+    # (heartbeats ride the same sockets, so allow them some headroom).
+    assert wire_counts["frames_recv"] < 2 * n_items
+
+    # requirement 7 extension: boot is accounted separately from load.
+    by_id = {t.node_id: t for t in builder.timing.nodes}
+    assert by_id["node0"].boot_ms >= 0.0
+    assert by_id["node0"].load_ms > 0.0
+
+
+def test_prefetch_zero_gives_strict_per_worker_window():
+    """prefetch=0 must be honoured (not clamped): the node buffers exactly
+    one item per worker — the pure demand-driven pre-pipelining window."""
+
+    def work(x):
+        return x * 2
+
+    app = ClusterBuilder().build_application(
+        _spec(1, 2, 30, work), backend="cluster", job_timeout=60.0,
+        prefetch=0, **FAST
+    )
+    assert app.run() == sum(2 * i for i in range(30))
+    # window == workers -> the single up-front request asked for exactly 2.
+    assert app.host_loader.stats.max_batch <= 2
+
+
+def test_unencodable_work_item_fails_job_instead_of_requeue_loop():
+    """An item no wire codec can carry must fail the job loudly — not be
+    mistaken for a dead pipe and requeued forever (regression)."""
+    deep = []
+    for _ in range(100_000):
+        deep = [deep]
+
+    spec = ClusterSpec.simple(
+        host="127.0.0.1", nclusters=1, workers_per_node=1,
+        emit_details=EmitDetails(
+            name="deep", init=lambda: 0, init_data=(),
+            create=lambda s: (None, s) if s else (deep, 1),
+        ),
+        work_function=lambda x: 0,
+        result_details=_sum_collect(),
+    )
+    app = ClusterBuilder().build_application(
+        spec, backend="cluster", job_timeout=60.0, **FAST
+    )
+    runner = app.run_async()
+    runner.join(timeout=60)
+    assert not runner.is_alive()
+    assert isinstance(app.error, ValueError)
+    assert "nested too deeply" in str(app.error)
+    assert app.orphaned() == []
+
+
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError, match="backend"):
         ClusterBuilder().build_application(
