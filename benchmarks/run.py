@@ -22,6 +22,14 @@ Instance sizes are env-tunable (CI smoke runs shrink them)::
     REPRO_BENCH_LINES / REPRO_BENCH_WIDTH / REPRO_BENCH_ITERS     tables 1-3
     REPRO_BENCH_T4_LINES / REPRO_BENCH_T4_ITERS                   table 4
 
+Table 4's cluster run takes a pluggable launcher: set
+``REPRO_BENCH_SSH_HOSTS=host1,host2`` to fan node-loaders out over ssh
+(``SSHLauncher``) instead of forking localhost subprocesses — CI's
+ssh-smoke job runs exactly this against a loopback sshd.  For hosts that
+are *not* this machine, also set ``REPRO_BENCH_BIND_HOST=0.0.0.0`` and
+``REPRO_BENCH_CONNECT_HOST=<ip the workstations can dial>``; the
+loopback defaults only reach node-loaders running locally.
+
 Table 4 defaults to a larger instance (full paper escape threshold of
 1000): the cluster backend pays a real multi-second boot per node
 (interpreter + jax import), and on a toy instance that fixed cost — not
@@ -57,6 +65,33 @@ T4_MAX_ITERS = int(os.environ.get("REPRO_BENCH_T4_ITERS", "1000"))
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 COMPILE_CACHE = os.path.join(RESULTS_DIR, "xla_cache")
+
+# Comma-separated workstations for the cluster rows: non-empty -> the same
+# bench fans node-loaders out over ssh (the deployment layer's SSHLauncher)
+# instead of forking localhost subprocesses.
+SSH_HOSTS = [h.strip()
+             for h in os.environ.get("REPRO_BENCH_SSH_HOSTS", "").split(",")
+             if h.strip()]
+# Spanning real machines needs routable addresses on both sides; the
+# defaults cover the localhost / loopback-sshd cases.
+BIND_HOST = os.environ.get("REPRO_BENCH_BIND_HOST", "127.0.0.1")
+CONNECT_HOST = os.environ.get("REPRO_BENCH_CONNECT_HOST") or None
+
+
+def _bench_launcher():
+    """The launcher table4's cluster run deploys with (None = local)."""
+    if not SSH_HOSTS:
+        return None
+    from repro.cluster.deploy import SSHLauncher
+
+    return SSHLauncher(
+        SSH_HOSTS,
+        connect_host=CONNECT_HOST,
+        python=sys.executable,
+        preload=("repro.kernels.mandelbrot.ops",),
+        compile_cache_dir=os.path.abspath(COMPILE_CACHE),
+        connect_timeout=120.0,
+    )
 
 
 def _mandelbrot_spec(
@@ -126,6 +161,11 @@ def _run_spec(nclusters: int, workers: int, backend: str = "threads",
             "preload": ("repro.kernels.mandelbrot.ops",),
             # Nodes load the host-warmed executable instead of recompiling.
             "compile_cache_dir": COMPILE_CACHE,
+            # Deployment is pluggable: REPRO_BENCH_SSH_HOSTS swaps the
+            # localhost fork for ssh fan-out, same bench otherwise.
+            "launcher": _bench_launcher(),
+            "bind_host": BIND_HOST,
+            "register_timeout": 120.0,
         }
     app = builder.build_application(
         _mandelbrot_spec(nclusters, workers, **spec_kw), backend=backend, **kw
@@ -224,6 +264,9 @@ def table4_threads_vs_processes() -> list[str]:
             comparison[backend]["wire"] = {
                 k: int(v) for k, v in sorted(timing.wire.items())
             }
+            comparison[backend]["launcher"] = (
+                f"ssh:{','.join(SSH_HOSTS)}" if SSH_HOSTS else "local"
+            )
         rows.append(
             f"table4_{backend}_nodes2_workers2,{dt * 1e6:.0f},"
             f"points={result[2]}"

@@ -24,10 +24,15 @@ Modules (one per architectural role):
   (register, boot-preload, load, windowed request→compute→batched deliver,
   UT shutdown);
 * :mod:`repro.cluster.membership` — registry + heartbeat tracking feeding the
-  ``runtime.failures`` detection thresholds;
-* :mod:`repro.cluster.spawn` — single-machine launcher forking N node-loader
-  subprocesses (the paper's §6.1 "test on one host first" mode with true
-  process isolation).
+  ``runtime.failures`` detection thresholds, with a launch lifecycle
+  (launching/registered/loaded/done/dead/replaced) for the placement policy;
+* :mod:`repro.cluster.deploy` — the pluggable deployment layer: the
+  :class:`~repro.cluster.deploy.base.Launcher` contract plus LocalLauncher
+  (subprocesses, §6.1 "test on one host first"), SSHLauncher (the identical
+  node-loader command fanned out over ssh, with rsync/tar code sync) and
+  InProcessLauncher (threads, for launcher-logic tests);
+* :mod:`repro.cluster.spawn` — ProcessClusterApplication: cluster lifecycle
+  + placement policy over whichever launcher the deployment chose.
 
 This package must stay importable without jax: the node-loader bootstrap path
 (wire/netchannels/membership/node_loader) imports no accelerator code; user

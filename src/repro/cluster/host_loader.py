@@ -42,8 +42,9 @@ import socket
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable, Sequence
 
+from repro.cluster.deploy.base import PlacementPolicy
 from repro.cluster.membership import Membership, NodeRecord
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
@@ -67,6 +68,10 @@ class HostStats:
     work_batches: int = 0  # WORK_BATCH frames sent
     result_batches: int = 0  # RESULT/RESULT_BATCH frames received
     max_batch: int = 0  # largest WORK_BATCH dispatched
+    # Placement-policy counters (deployment layer).
+    respawns: int = 0  # silent launches relaunched elsewhere
+    late_joins: int = 0  # nodes admitted after the run started
+    degraded_start: bool = False  # job admitted below full strength
 
 
 class WorkFunctionError(RuntimeError):
@@ -91,6 +96,9 @@ class HostLoader:
         prefetch: int | None = None,
         flush_items: int = 8,
         flush_interval: float = 0.005,
+        placement: PlacementPolicy | None = None,
+        expected_nodes: Sequence[str] | None = None,
+        relaunch: Callable[[str, str], bool] | None = None,
     ):
         spec.validate()
         self.spec = spec
@@ -98,6 +106,15 @@ class HostLoader:
         self.host = host
         self.membership = Membership(heartbeat or HeartbeatMonitor())
         self.register_timeout = register_timeout
+        self.placement = placement or PlacementPolicy()
+        self.placement.validate(spec.nclusters)
+        # Launch announcements: expected node ids become LAUNCHING records
+        # at start(), which is what arms respawn tracking and late join.
+        self.expected_nodes = list(expected_nodes or [])
+        # Deployment-layer callback: relaunch(old_node_id, new_node_id) ->
+        # bool, provided by the application so the barrier can respawn a
+        # silent launch without knowing what a launcher is.
+        self.relaunch = relaunch
         self.job_timeout = job_timeout
         self.slowdown = dict(slowdown or {})
         self.artifacts = dict(artifacts or {})
@@ -121,6 +138,8 @@ class HostLoader:
 
     def start(self) -> None:
         """Open the load network (accept + ticker threads)."""
+        for node_id in self.expected_nodes:
+            self.membership.expect(node_id)
         for fn, name in ((self._accept_loop, "hnl-accept"),
                          (self._tick_loop, "hnl-ticker")):
             t = threading.Thread(target=fn, name=name, daemon=True)
@@ -349,9 +368,29 @@ class HostLoader:
                     # heartbeat threshold (reap), keeping one detection path.
                     pass
                 elif kind == "register":
-                    # Late joiner after bootstrap: not part of this job.
-                    _, _, _, conn, _ = event
-                    conn.close()
+                    # Late join: a node registering after the run started is
+                    # shipped LOAD immediately (the per-registration LOAD
+                    # path always supported this — the membership barrier
+                    # was what blocked it) and its first WORK_REQUEST is
+                    # answered with items or, if the stream already drained,
+                    # with UT.  Exactly-once is untouched: result-id dedup
+                    # never depended on when a node joined.
+                    _, node_id, addr, conn, payload = event
+                    if not self.placement.allow_late_join:
+                        conn.close()
+                        continue
+                    try:
+                        rec = self.membership.register(
+                            node_id, addr,
+                            cores=int(payload.get("cores", 1)),
+                            pid=int(payload.get("pid", 0)),
+                            conn=conn,
+                        )
+                    except ValueError:
+                        conn.close()  # duplicate of a live member
+                        continue
+                    self.stats.late_joins += 1
+                    self._send_load(rec)
                 if not self.membership.alive_nodes() and (
                         inflight or pending or not emit_done):
                     raise RuntimeError(
@@ -366,17 +405,69 @@ class HostLoader:
     # -- bootstrap helpers --------------------------------------------------
 
     def _await_registrations(self) -> None:
-        deadline = time.monotonic() + self.register_timeout
+        """The membership barrier, driven by the placement policy.
+
+        Strict mode (the default policy) reproduces the seed behaviour:
+        block until all ``nclusters`` launches registered or raise at
+        ``register_timeout``.  The policy relaxes it three ways:
+
+        * *respawn-on-silent-node* — an announced launch quiet past its
+          ``respawn_after`` window is retired (REPLACED) and relaunched
+          elsewhere through the deployment layer's ``relaunch`` callback,
+          up to ``max_respawns`` times cluster-wide;
+        * *degraded start* — at the timeout the job is admitted with the
+          survivors if at least ``min_nodes`` arrived, instead of raising;
+          the missing stragglers stay LAUNCHING and may still late-join;
+        * a launch arriving *during* the barrier under a REPLACED id is
+          re-admitted (membership handles the transition) — first
+          registration wins, extra capacity is never turned away.
+        """
+        pol = self.placement
         expected = self.spec.nclusters
-        while len(self.membership.nodes) < expected:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
+        min_nodes = expected if pol.min_nodes is None else pol.min_nodes
+        respawn_after = pol.respawn_after
+        if respawn_after is None:
+            respawn_after = self.register_timeout / (pol.max_respawns + 1)
+        respawns_left = pol.max_respawns
+        t0 = time.monotonic()
+        deadline = t0 + self.register_timeout
+        # The silence clock starts *now*: launch announcements were stamped
+        # at start(), before the launcher's prepare() (possibly a slow code
+        # sync to many machines) and the sequential launch() calls — judging
+        # silence from that stamp would respawn healthy just-launched nodes.
+        for rec in self.membership.launching_nodes():
+            rec.launched_at = t0
+        while self.membership.arrived_count() < expected:
+            now = time.monotonic()
+            next_respawn_due: float | None = None
+            if self.relaunch is not None and respawns_left > 0:
+                for rec in self.membership.launching_nodes():
+                    if respawns_left <= 0:
+                        break
+                    due = rec.launched_at + respawn_after
+                    if now >= due:
+                        if self._respawn(rec):
+                            respawns_left -= 1
+                    elif next_respawn_due is None or due < next_respawn_due:
+                        next_respawn_due = due
+            if now >= deadline:
+                arrived = self.membership.arrived_count()
+                if arrived >= min_nodes:
+                    # Degraded start: the survivors carry the job; the
+                    # demand-driven protocol needs no topology change.
+                    self.stats.degraded_start = arrived < expected
+                    return
                 raise TimeoutError(
-                    f"only {len(self.membership.nodes)}/{expected} node-loaders "
-                    f"registered within {self.register_timeout}s"
+                    f"only {arrived}/{expected} node-loaders registered "
+                    f"within {self.register_timeout}s (min_nodes="
+                    f"{min_nodes}, respawns used="
+                    f"{pol.max_respawns - respawns_left})"
                 )
+            timeout = deadline - now
+            if next_respawn_due is not None:
+                timeout = min(timeout, next_respawn_due - now)
             try:
-                event = self._events.get(timeout=remaining)
+                event = self._events.get(timeout=max(0.01, timeout))
             except queue.Empty:
                 continue
             if event[0] == "loaded":
@@ -410,6 +501,25 @@ class HostLoader:
             # Overlapped load: ship code the moment a node shows up, so its
             # deserialization/imports run while stragglers still register.
             self._send_load(rec)
+
+    def _respawn(self, rec: NodeRecord) -> bool:
+        """Retire a silent launch and start a replacement elsewhere."""
+        new_id = f"{rec.node_id}r{rec.attempts + 1}"
+        try:
+            ok = self.relaunch(rec.node_id, new_id)
+        except Exception:
+            ok = False
+        if not ok:
+            # Could not place a replacement: re-arm the silence window so
+            # the original keeps its chance instead of burning the budget
+            # in a tight loop.
+            rec.launched_at = time.monotonic()
+            return False
+        self.membership.replace(rec.node_id)
+        nrec = self.membership.expect(new_id)
+        nrec.attempts = rec.attempts + 1
+        self.stats.respawns += 1
+        return True
 
     def _send_load(self, rec: NodeRecord) -> None:
         """Ship the deployment to one node from a dedicated sender thread.

@@ -22,12 +22,20 @@ from typing import Any
 
 from repro.runtime.failures import FailureEvent, HeartbeatMonitor
 
-# Node lifecycle: REGISTERED -(LOAD)-> LOADED -(UT ack)-> DONE
-#                                   \-(missed beats)----> DEAD
+# Node lifecycle:
+#   LAUNCHING -(REGISTER)-> REGISTERED -(LOAD)-> LOADED -(UT ack)-> DONE
+#       |                        \-----------(missed beats)-------> DEAD
+#       \-(respawned elsewhere)-> REPLACED -(its launch registers late)
+#                                     \------(REGISTER)-----------> REGISTERED
+# LAUNCHING records exist only when the deployment layer announces expected
+# launches up front (``expect``); direct ``register`` calls still create
+# records from scratch (an unannounced/elastic node).
+LAUNCHING = "launching"
 REGISTERED = "registered"
 LOADED = "loaded"
 DONE = "done"
 DEAD = "dead"
+REPLACED = "replaced"
 
 
 @dataclass
@@ -38,6 +46,8 @@ class NodeRecord:
     cores: int = 1
     pid: int = 0
     state: str = REGISTERED
+    attempts: int = 1  # launch attempts (respawns bump the replacement's)
+    launched_at: float = 0.0  # when the launch was announced (expect)
     registered_at: float = 0.0
     last_beat: float = 0.0
     beats: int = 0
@@ -62,23 +72,61 @@ class Membership:
         self.nodes: dict[str, NodeRecord] = {}
         self.failures: list[FailureEvent] = []
 
+    def expect(self, node_id: str, now: float | None = None) -> NodeRecord:
+        """Announce a launch: a record in LAUNCHING until REGISTER arrives."""
+        if node_id in self.nodes:
+            raise ValueError(f"duplicate launch announcement for {node_id!r}")
+        now = time.monotonic() if now is None else now
+        rec = NodeRecord(
+            node_id=node_id,
+            index=len(self.nodes),
+            address="",
+            state=LAUNCHING,
+            launched_at=now,
+        )
+        self.nodes[node_id] = rec
+        return rec
+
     def register(self, node_id: str, address: str, *, cores: int = 1,
                  pid: int = 0, conn: Any = None,
                  now: float | None = None) -> NodeRecord:
-        if node_id in self.nodes:
-            raise ValueError(f"duplicate registration for {node_id!r}")
         now = time.monotonic() if now is None else now
+        rec = self.nodes.get(node_id)
+        if rec is not None:
+            # An announced launch showing up — or a replaced launch arriving
+            # late, which is still a usable worker (exactly-once collection
+            # is guaranteed by result-id dedup, so admit it).
+            if rec.state not in (LAUNCHING, REPLACED):
+                raise ValueError(f"duplicate registration for {node_id!r}")
+            rec.address = address
+            rec.cores = cores
+            rec.pid = pid
+            rec.conn = conn
+            rec.state = REGISTERED
+            rec.registered_at = rec.last_beat = now
+            return rec
         rec = NodeRecord(
             node_id=node_id,
             index=len(self.nodes),
             address=address,
             cores=cores,
             pid=pid,
+            launched_at=now,
             registered_at=now,
             last_beat=now,
             conn=conn,
         )
         self.nodes[node_id] = rec
+        return rec
+
+    def replace(self, node_id: str) -> NodeRecord:
+        """A silent launch was respawned elsewhere: retire the old attempt."""
+        rec = self.nodes[node_id]
+        if rec.state != LAUNCHING:
+            raise ValueError(
+                f"cannot replace {node_id!r} in state {rec.state!r}"
+            )
+        rec.state = REPLACED
         return rec
 
     def beat(self, node_id: str, now: float | None = None) -> None:
@@ -125,9 +173,24 @@ class Membership:
     def alive_nodes(self) -> list[NodeRecord]:
         return [r for r in self.nodes.values() if r.alive]
 
+    def launching_nodes(self) -> list[NodeRecord]:
+        return [r for r in self.nodes.values() if r.state == LAUNCHING]
+
+    def arrived_count(self) -> int:
+        """Launches that turned into real cluster members (any state past
+        LAUNCHING, except abandoned REPLACED attempts)."""
+        return sum(1 for r in self.nodes.values()
+                   if r.state not in (LAUNCHING, REPLACED))
+
     def finished(self) -> bool:
-        """True when no node is still expected to produce anything."""
-        return all(r.state in (DONE, DEAD) for r in self.nodes.values())
+        """True when no node is still expected to produce anything.
+
+        LAUNCHING records (a degraded start's missing stragglers, still
+        eligible to late-join) and REPLACED ones don't block termination —
+        only members that actually joined the application network do.
+        """
+        return all(r.state not in (REGISTERED, LOADED)
+                   for r in self.nodes.values())
 
     def describe(self) -> str:
         lines = [f"{'node':<10}{'state':<12}{'addr':<22}{'beats':>6}{'items':>7}"]

@@ -11,7 +11,9 @@ Lifecycle (timed per requirement 7, split three ways):
 1. *boot*: connect + REGISTER (node id, cores, pid) on the load channel
    while a background thread pre-imports heavy dependencies named on the
    command line (``--preload jax.numpy``) — the environment cost of the
-   workstation, accounted separately from code distribution;
+   workstation, accounted separately from code distribution.  The dial
+   retries with exponential backoff inside ``--connect-timeout``: a
+   remotely launched node may come up before the host is listening;
 2. *load*: receive LOAD — the deployment payload (work function shipped by
    value over the code-loading channel; optional AOT-serialized executables
    land in :data:`ARTIFACTS`).  Deserialization is deferred until the
@@ -62,6 +64,36 @@ from repro.cluster.wire import (
 ARTIFACTS: dict[str, bytes] = {}
 
 
+def connect_with_retry(host: str, port: int,
+                       timeout: float = 30.0) -> socket.socket:
+    """Dial the host, retrying with exponential backoff until ``timeout``.
+
+    On a real network the start order is uncontrolled: an ssh-launched
+    node-loader routinely comes up before the host binds its load port (or
+    while the host is still syncing code to other machines).  Dying on the
+    first ECONNREFUSED would turn every such race into a lost workstation;
+    instead the node keeps dialling — 0.2s, 0.4s, ... capped at 2s between
+    attempts — and only gives up once the whole window is spent.
+    """
+    deadline = time.monotonic() + timeout
+    delay = 0.2
+    while True:
+        remaining = deadline - time.monotonic()
+        try:
+            return socket.create_connection(
+                (host, port), timeout=max(0.2, min(5.0, remaining))
+            )
+        except OSError as exc:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise ConnectionError(
+                    f"could not reach host-node-loader at {host}:{port} "
+                    f"within {timeout}s: {exc}"
+                ) from exc
+            time.sleep(min(delay, remaining))
+            delay = min(delay * 2, 2.0)
+
+
 def run_node(
     host: str,
     port: int,
@@ -88,7 +120,7 @@ def run_node(
                                       daemon=True)
     preload_thread.start()
 
-    sock = socket.create_connection((host, port), timeout=connect_timeout)
+    sock = connect_with_retry(host, port, timeout=connect_timeout)
     sock.settimeout(None)
     conn = FrameConnection(sock)
     mux = ChannelMux(conn)
@@ -309,7 +341,11 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--port", type=int, required=True,
                         help="load network port (the paper's 2000)")
     parser.add_argument("--node-id", default=None)
-    parser.add_argument("--connect-timeout", type=float, default=30.0)
+    parser.add_argument(
+        "--connect-timeout", type=float, default=30.0,
+        help="seconds to keep retrying the initial host dial (with "
+             "exponential backoff) before giving up",
+    )
     parser.add_argument(
         "--preload", default="",
         help="comma-separated modules to import during boot, overlapping "

@@ -1,72 +1,42 @@
-"""Single-machine launcher: N real node-loader subprocesses + in-process HNL.
+"""ProcessClusterApplication: cluster lifecycle + deployment policy.
 
-The paper's §6.1 workflow — "operation and testing of a system can be
-conducted on a single host node before using multiple nodes" — with true
-process isolation: each Node-Loader is a fresh ``python -m
-repro.cluster.node_loader`` OS process talking TCP on localhost, so there is
-no GIL coupling and killing one is a *real* node death, not an injected one.
-Moving to many hosts later is only a matter of starting the same command on
-other machines (the node-loader needs nothing but the host address).
+The runnable returned by ``build_application(spec, backend="cluster")``.
+*How* node-loaders come into existence is delegated to a pluggable
+:class:`~repro.cluster.deploy.base.Launcher` (``repro.cluster.deploy``):
+subprocesses on this machine (:class:`LocalLauncher`, the default — the
+paper's §6.1 "test on one host first" mode with true process isolation),
+ssh fan-out to idle workstations (:class:`SSHLauncher`, via ``launcher=``
+or the ``hosts=`` shorthand), or threads for fast launcher-logic tests
+(:class:`InProcessLauncher`).  This module no longer knows what a
+``subprocess.Popen`` is.
 
-The launcher exports the host's ``sys.path`` to the children so code shipped
-by reference (plain-pickle fallback, user modules) resolves; code shipped by
-value (cloudpickle closures) needs only the libraries it imports.
+What remains here is lifecycle and policy: bootstrap the HostLoader, fan
+the launches out, relaunch silent nodes when the host's placement policy
+asks (``min_nodes`` / ``max_respawns`` / late join — see
+:class:`~repro.cluster.deploy.base.PlacementPolicy`), and guarantee that
+*no path out of run()/start() leaks a child* — teardown runs even when
+bootstrap itself raises midway through the fan-out.
+
+``spawn_node_loader`` is re-exported for direct callers; it lives in
+``repro.cluster.deploy.local`` now.
 """
 
 from __future__ import annotations
 
-import collections
-import os
-import subprocess
-import sys
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Sequence
 
+from repro.cluster.deploy.base import Launcher, NodeHandle, PlacementPolicy
+from repro.cluster.deploy.local import (  # noqa: F401  (compat re-exports)
+    LocalLauncher,
+    _child_env,
+    spawn_node_loader,
+)
 from repro.cluster.host_loader import HostLoader
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor
-
-
-def _child_env(compile_cache_dir: str | None = None) -> dict[str, str]:
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
-    # Node-loaders are bootstrap processes: keep their (transitive) jax happy
-    # on CPU-only machines and their thread pools small.
-    env.setdefault("JAX_PLATFORMS", "cpu")
-    if compile_cache_dir:
-        # Cluster-wide XLA compilation cache: the host's warm-up compile
-        # lands on disk and every node-loader loads the binary instead of
-        # recompiling — the paper's single-source code-shipping idea applied
-        # to executables.
-        env["JAX_COMPILATION_CACHE_DIR"] = compile_cache_dir
-        env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
-    return env
-
-
-def spawn_node_loader(host: str, port: int, node_id: str,
-                      *, python: str = sys.executable,
-                      preload: tuple[str, ...] = (),
-                      compile_cache_dir: str | None = None
-                      ) -> subprocess.Popen:
-    """Start one Node-Loader subprocess (the §4 'identical executable').
-
-    ``preload`` names modules the child imports concurrently with its
-    registration (e.g. ``("jax.numpy",)``), so heavy environment boot
-    overlaps the load-network handshake instead of serializing after it.
-    """
-    cmd = [python, "-m", "repro.cluster.node_loader",
-           "--host", host, "--port", str(port), "--node-id", node_id]
-    if preload:
-        cmd += ["--preload", ",".join(preload)]
-    return subprocess.Popen(
-        cmd,
-        env=_child_env(compile_cache_dir),
-        stdout=subprocess.PIPE,
-        stderr=subprocess.PIPE,
-        text=True,
-    )
 
 
 @dataclass
@@ -75,9 +45,10 @@ class ProcessClusterApplication:
 
     Same contract as ``runtime.local.LocalClusterApplication`` — ``run()``
     blocks to completion and returns the finalised result — but the workers
-    are real subprocesses.  ``slowdown`` maps node ids to an artificial
-    seconds-per-item delay (straggler injection for §6.1-style testing);
-    ``kill_node`` turns a live subprocess into a real mid-job node death.
+    are real node-loaders started by a :class:`Launcher`.  ``slowdown``
+    maps node ids to an artificial seconds-per-item delay (straggler
+    injection for §6.1-style testing); ``kill_node`` turns a live node into
+    a real mid-job node death.
     """
 
     spec: Any
@@ -89,6 +60,7 @@ class ProcessClusterApplication:
     heartbeat_interval: float = 0.5
     heartbeat_misses: int = 10
     job_timeout: float = 300.0
+    register_timeout: float = 30.0
     shutdown_grace: float = 10.0
     slowdown: dict[str, float] = field(default_factory=dict)
     artifacts: dict[str, bytes] = field(default_factory=dict)
@@ -103,16 +75,38 @@ class ProcessClusterApplication:
     # Directory for a shared XLA compilation cache (host warms it, nodes
     # load instead of recompiling).  None = no persistent cache.
     compile_cache_dir: str | None = None
+    # -- deployment layer ---------------------------------------------------
+    # Which machines run node-loaders and what happens when one never shows
+    # up.  ``launcher=None`` defaults to LocalLauncher (subprocesses here);
+    # ``hosts=["ws01", ...]`` is shorthand for an SSHLauncher over those
+    # machines.  ``bind_host`` is the load-network bind address — keep the
+    # loopback default for local runs, use "0.0.0.0" (plus an
+    # SSHLauncher(connect_host=<reachable ip>)) to span machines.
+    launcher: Launcher | None = None
+    hosts: Sequence[str] | None = None
+    bind_host: str = "127.0.0.1"
+    min_nodes: int | None = None
+    max_respawns: int = 0
+    respawn_after: float | None = None
+    allow_late_join: bool = True
 
     host_loader: HostLoader | None = None
-    processes: dict[str, subprocess.Popen] = field(default_factory=dict)
-    # Last lines of each node-loader's stdout+stderr (drained continuously so
-    # a chatty child never blocks on a full pipe; kept for diagnostics).
-    node_logs: dict[str, "collections.deque[str]"] = field(default_factory=dict)
+    handles: dict[str, NodeHandle] = field(default_factory=dict)
     result: Any = None
     error: BaseException | None = None  # set by run_async on failure
     _ran: bool = False
-    _drainers: list[threading.Thread] = field(default_factory=list)
+
+    # -- compat views (the seed exposed Popen internals) --------------------
+
+    @property
+    def processes(self) -> dict[str, NodeHandle]:
+        """Per-node handles (named for the era when they were Popens)."""
+        return self.handles
+
+    @property
+    def node_logs(self) -> dict[str, list[str]]:
+        """Last lines of each node-loader's stdout+stderr (diagnostics)."""
+        return {nid: h.logs() for nid, h in self.handles.items()}
 
     def node_ids(self) -> list[str]:
         return [f"node{i}" for i in range(self.spec.nclusters)]
@@ -120,51 +114,95 @@ class ProcessClusterApplication:
     # -- lifecycle ----------------------------------------------------------
 
     def start(self) -> None:
-        """Bootstrap the load network and fork the node-loaders."""
+        """Bootstrap the load network and fan out the node-loaders.
+
+        Any failure mid-fan-out (port bind, a launcher raising on the k-th
+        node) tears down whatever was already started — bootstrap must
+        never leak children.
+        """
+        try:
+            self._start_inner()
+        except BaseException:
+            self._shutdown()
+            raise
+
+    def _start_inner(self) -> None:
+        if self.launcher is not None and self.hosts is not None:
+            raise TypeError("pass either launcher= or hosts=, not both")
+        if self.launcher is None:
+            if self.hosts is not None:
+                from repro.cluster.deploy.ssh import SSHLauncher
+
+                self.launcher = SSHLauncher(
+                    self.hosts,
+                    preload=tuple(self.preload),
+                    compile_cache_dir=self.compile_cache_dir,
+                )
+            else:
+                self.launcher = LocalLauncher(
+                    preload=tuple(self.preload),
+                    compile_cache_dir=self.compile_cache_dir,
+                )
+        node_ids = self.node_ids()
         self.host_loader = HostLoader(
             self.spec,
             self.timing,
+            host=self.bind_host,
             port=self.port,
             heartbeat=HeartbeatMonitor(
                 interval_s=self.heartbeat_interval,
                 misses=self.heartbeat_misses,
             ),
+            register_timeout=self.register_timeout,
             job_timeout=self.job_timeout,
             slowdown=self.slowdown,
             artifacts=self.artifacts,
             prefetch=self.prefetch,
             flush_items=self.flush_items,
             flush_interval=self.flush_interval,
+            placement=PlacementPolicy(
+                min_nodes=self.min_nodes,
+                max_respawns=self.max_respawns,
+                respawn_after=self.respawn_after,
+                allow_late_join=self.allow_late_join,
+            ),
+            expected_nodes=node_ids,
+            relaunch=self._relaunch,
         )
         self.host_loader.start()
-        for node_id in self.node_ids():
-            proc = spawn_node_loader(
-                "127.0.0.1", self.host_loader.port, node_id,
-                preload=tuple(self.preload),
-                compile_cache_dir=self.compile_cache_dir,
-            )
-            self.processes[node_id] = proc
-            self.node_logs[node_id] = collections.deque(maxlen=200)
-            for stream in (proc.stdout, proc.stderr):
-                t = threading.Thread(
-                    target=self._drain, args=(node_id, stream),
-                    name=f"drain-{node_id}", daemon=True,
-                )
-                t.start()
-                self._drainers.append(t)
+        # The bind address goes through verbatim: each launcher knows how to
+        # resolve an unroutable "0.0.0.0" (loopback for local launchers; an
+        # SSHLauncher keeps its explicitly configured connect_host).
+        self.launcher.prepare(self.bind_host, self.host_loader.port)
+        for node_id in node_ids:
+            self.handles[node_id] = self.launcher.launch(node_id)
 
-    def _drain(self, node_id: str, stream) -> None:
-        for line in stream:
-            self.node_logs[node_id].append(line.rstrip("\n"))
-        stream.close()
+    def _relaunch(self, old_node_id: str, new_node_id: str) -> bool:
+        """Placement-policy callback: a launch never registered — retire it
+        and start a replacement, steering clear of the machine that already
+        swallowed one launch."""
+        old = self.handles.get(old_node_id)
+        avoid = (old.where,) if old is not None else ()
+        try:
+            self.handles[new_node_id] = self.launcher.launch(
+                new_node_id, avoid=avoid
+            )
+        except Exception:
+            return False
+        if old is not None:
+            try:
+                old.kill()  # best effort; it never joined the network
+            except Exception:
+                pass
+        return True
 
     def run(self) -> Any:
         if self._ran:
             raise RuntimeError("application already ran; build a fresh one")
         self._ran = True
-        if self.host_loader is None:
-            self.start()
         try:
+            if self.host_loader is None:
+                self.start()
             self.result = self.host_loader.run()
         finally:
             self._shutdown()
@@ -185,9 +223,9 @@ class ProcessClusterApplication:
         return t
 
     def kill_node(self, node_id: str) -> None:
-        """SIGKILL a node-loader: a real workstation loss, detected only by
-        its heartbeats going silent."""
-        self.processes[node_id].kill()
+        """Hard-kill a node-loader: a real workstation loss, detected only
+        by its heartbeats going silent."""
+        self.handles[node_id].kill()
 
     # -- teardown -----------------------------------------------------------
 
@@ -198,17 +236,18 @@ class ProcessClusterApplication:
         if self.host_loader is not None:
             self.host_loader.close()
         deadline = time.monotonic() + self.shutdown_grace
-        for node_id, proc in self.processes.items():
+        for handle in self.handles.values():
             remaining = max(0.0, deadline - time.monotonic())
-            try:
-                proc.wait(timeout=remaining)
-            except subprocess.TimeoutExpired:
-                proc.kill()
-                proc.wait()
-        for t in self._drainers:  # EOF arrives once the child exits
-            t.join(timeout=5.0)
+            if handle.wait(timeout=remaining) is None:
+                handle.kill()
+                handle.wait(timeout=self.shutdown_grace)
+        for handle in self.handles.values():
+            join = getattr(handle, "join_drainers", None)
+            if join is not None:  # EOF arrives once the child exits
+                join()
+        if self.launcher is not None:
+            self.launcher.close()
 
     def orphaned(self) -> list[str]:
         """Node-loaders still running after shutdown (must be empty)."""
-        return [nid for nid, p in self.processes.items()
-                if p.returncode is None]
+        return [nid for nid, h in self.handles.items() if h.poll() is None]

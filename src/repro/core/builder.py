@@ -270,6 +270,16 @@ class ClusterBuilder:
           (``repro.cluster``).  ``backend_options`` are forwarded to
           :class:`repro.cluster.spawn.ProcessClusterApplication` (e.g.
           ``port=0``, ``slowdown={node_id: seconds_per_item}``).
+          *Where* the node-loaders run is pluggable (the deployment
+          layer, ``repro.cluster.deploy``): ``launcher=`` takes any
+          :class:`~repro.cluster.deploy.base.Launcher` (LocalLauncher
+          subprocesses by default, SSHLauncher for real workstations,
+          InProcessLauncher threads for tests), and ``hosts=["ws01",...]``
+          is shorthand for ssh fan-out over those machines.  The
+          registration barrier is policy-driven: ``min_nodes=`` admits a
+          degraded start with survivors, ``max_respawns=`` relaunches a
+          node that never registers elsewhere, and late joiners are
+          shipped LOAD + credits mid-run (``allow_late_join``).
           One transport caveat: ndarray payloads cross the wire on a
           zero-copy codec and arrive as *read-only* views — a work
           function that mutates its input in place must ``np.copy`` it

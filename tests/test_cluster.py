@@ -202,6 +202,7 @@ def test_demand_driven_distribution_biases_against_straggler():
     assert items["node1"] < items["node0"], items
     # ~10x slower per item -> well under half the work
     assert items["node1"] <= 40 // 2 - 2, items
+    assert app.orphaned() == []
 
 
 def test_node_death_is_detected_and_work_redispatched():
@@ -327,6 +328,7 @@ def test_pipelined_dispatch_batches_frames_and_counts_wire_traffic():
     by_id = {t.node_id: t for t in builder.timing.nodes}
     assert by_id["node0"].boot_ms >= 0.0
     assert by_id["node0"].load_ms > 0.0
+    assert app.orphaned() == []
 
 
 def test_prefetch_zero_gives_strict_per_worker_window():
@@ -343,6 +345,7 @@ def test_prefetch_zero_gives_strict_per_worker_window():
     assert app.run() == sum(2 * i for i in range(30))
     # window == workers -> the single up-front request asked for exactly 2.
     assert app.host_loader.stats.max_batch <= 2
+    assert app.orphaned() == []
 
 
 def test_unencodable_work_item_fails_job_instead_of_requeue_loop():
