@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.builder import ClusterBuilder
-from repro.core.dsl import ClusterSpec
+from repro.core.dsl import ClusterSpec, Pipeline
 from repro.core.processes import EmitDetails, ResultDetails
 from repro.kernels.mandelbrot.ops import mandelbrot
 from repro.kernels.mandelbrot.ref import line_coords
@@ -62,6 +62,10 @@ LINES_PER_ITEM = 4  # one work object = a band of lines (paper: 1 line)
 # Table 4 (threads vs processes) runs closer to the paper's instance.
 T4_LINES = int(os.environ.get("REPRO_BENCH_T4_LINES", "480"))
 T4_MAX_ITERS = int(os.environ.get("REPRO_BENCH_T4_ITERS", "1000"))
+
+# Two-stage pipeline bench (Mandelbrot bands -> per-band reduce).
+P2_LINES = int(os.environ.get("REPRO_BENCH_P2_LINES", "96"))
+P2_MAX_ITERS = int(os.environ.get("REPRO_BENCH_P2_ITERS", "300"))
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 COMPILE_CACHE = os.path.join(RESULTS_DIR, "xla_cache")
@@ -324,6 +328,105 @@ def _append_trajectory(comparison: dict) -> None:
         json.dump(history, fh, indent=2)
 
 
+def _two_stage_pipeline_spec(lines: int = P2_LINES, width: int = WIDTH,
+                             max_iters: int = P2_MAX_ITERS):
+    """Mandelbrot rendered per band (stage 1, the compute-heavy hop) whose
+    per-line records are then reduced per band (stage 2, a cheap hop on its
+    own node) — the multi-stage shape the PipelineSpec API adds."""
+    lines_per_item = LINES_PER_ITEM
+
+    def init(n_items):
+        return (0, n_items)
+
+    def create(state):
+        i, n = state
+        if i >= n:
+            return None, state
+        return i, (i + 1, n)
+
+    def render(item: int):
+        import jax.numpy as jnp  # the node imports its own (preloaded) jax
+
+        from repro.kernels.mandelbrot.ops import mandelbrot
+        from repro.kernels.mandelbrot.ref import line_coords
+
+        y0 = item * lines_per_item
+        xs, ys = [], []
+        for dy in range(lines_per_item):
+            x, y = line_coords(width, y0 + dy)
+            xs.append(x)
+            ys.append(y)
+        iters, colour = mandelbrot(jnp.stack(xs), jnp.stack(ys),
+                                   max_iters=max_iters)
+        # one record per line: (total_iters, white, points)
+        return [
+            (int(jnp.sum(iters[i])), int(jnp.sum(colour[i])), width)
+            for i in range(lines_per_item)
+        ]
+
+    def reduce_band(records):
+        t = w = p = 0
+        for (ti, wi, pi) in records:
+            t, w, p = t + ti, w + wi, p + pi
+        return (t, w, p)
+
+    def collect(acc, item):
+        t, w, p = item
+        return (acc[0] + t, acc[1] + w, acc[2] + p)
+
+    return (Pipeline(host="127.0.0.1")
+            .emit(EmitDetails(name="Mdata", init=init,
+                              init_data=(lines // lines_per_item,),
+                              create=create))
+            .stage(render, nodes=2, workers=2, name="render")
+            .stage(reduce_band, nodes=1, workers=1, name="reduce")
+            .collect(ResultDetails(name="Mcollect", init=lambda: (0, 0, 0),
+                                   collect=collect))
+            .build())
+
+
+def pipeline_two_stage() -> list[str]:
+    """The two-stage pipeline on both backends: same spec, matching results.
+
+    Row format mirrors table4; the derived column records the per-stage
+    item routing (render nodes share the emit stream, the reduce node sees
+    every forwarded band) and whether the backends agree.
+    """
+    _enable_compile_cache()
+    _warm(P2_MAX_ITERS)
+    rows = []
+    expected = None
+    match = True
+    for backend in ("threads", "cluster"):
+        builder = ClusterBuilder()
+        kw = {}
+        if backend == "cluster":
+            kw = {
+                "job_timeout": 600.0,
+                "preload": ("repro.kernels.mandelbrot.ops",),
+                "compile_cache_dir": COMPILE_CACHE,
+                "register_timeout": 120.0,
+            }
+        app = builder.build_application(
+            _two_stage_pipeline_spec(), backend=backend, **kw
+        )
+        t0 = time.perf_counter()
+        result = app.run()
+        dt = time.perf_counter() - t0
+        expected = expected or result
+        match = match and (result == expected)
+        items = {t.node_id: t.items for t in builder.timing.nodes
+                 if t.node_id.startswith("node")}
+        rows.append(
+            f"pipeline2_{backend}_render2x2_reduce1x1,{dt * 1e6:.0f},"
+            f"points={result[2]}"
+            f";items={'/'.join(str(items[k]) for k in sorted(items))}"
+            f";results_match={result == expected}"
+        )
+    rows.append(f"pipeline2_match,0,results_match={match}")
+    return rows
+
+
 def table3_multicore_vs_cluster() -> list[str]:
     """Paper Table 3: same worker-core count, one node vs many nodes."""
     rows = []
@@ -420,6 +523,7 @@ def main() -> None:
         table2_cluster_scaling,
         table3_multicore_vs_cluster,
         table4_threads_vs_processes,
+        pipeline_two_stage,
         load_time_linearity,
         verification_cost,
         kernel_microbench,

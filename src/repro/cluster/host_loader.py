@@ -16,12 +16,24 @@ Bootstrap sequence (the load network):
    that many items in one WORK_BATCH frame; each RESULT_BATCH a node sends
    both delivers results and (piggybacked ``credits``) re-requests that
    many replacement items.  The CSP obligation is unchanged — every demand
-   is answered in finite time with items or, once the emit stream is
-   exhausted and nothing is in flight, with UT — the window is just wider
-   than one.
+   is answered in finite time with items or, once the node's input stream
+   is exhausted and nothing is in flight, with UT — the window is just
+   wider than one.
 4. On UT each node returns its (boot_ms, load_ms, run_ms, items) timing
    record (requirement 7) and the HNL folds results via the user's
    ResultDetails.
+
+Multi-stage routing (``PipelineSpec``): every node belongs to one stage;
+the host keeps *per-stage* pending/in-flight/dedup state and answers a
+node's credits only from its own stage's queue.  A RESULT_BATCH from a
+stage-*s* node is deduplicated and its values re-enter the host as fresh
+WORK items of stage *s+1* (the final stage folds into the collector) — the
+host is the rendezvous between hops, exactly as the chained CSP model has
+reducer *s* feeding server *s+1*.  Stage *s*'s input is exhausted once the
+emit stream (s = 0) or stage *s-1* (s > 0) has fully drained, at which
+point parked credits of stage-*s* nodes are answered with UT.  Exactly-once
+holds per stage: result-id dedup before forwarding means a redispatched
+zombie's duplicate can neither double-collect nor double-forward.
 
 Beyond the paper: heartbeat liveness (``membership``) — a node-loader that
 dies mid-job is detected by missed beats, its in-flight items re-queued and
@@ -45,7 +57,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
 from repro.cluster.deploy.base import PlacementPolicy
-from repro.cluster.membership import Membership, NodeRecord
+from repro.cluster.membership import LAUNCHING, Membership, NodeRecord
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
     LOAD_WIRE_CHANNEL,
@@ -54,7 +66,9 @@ from repro.cluster.wire import (
     FrameType,
 )
 from repro.core.timing import TimingCollector
-from repro.runtime.failures import HeartbeatMonitor
+from repro.runtime.failures import HeartbeatMonitor, WorkFunctionError
+
+__all__ = ["HostLoader", "HostStats", "WorkFunctionError"]
 
 
 @dataclass
@@ -63,6 +77,7 @@ class HostStats:
     duplicates_dropped: int = 0
     redispatched: int = 0
     deaths_detected: int = 0
+    forwarded: int = 0  # stage-s results re-entered as stage-s+1 work items
     # Data-plane counters (credit pipeline).
     work_requests: int = 0  # explicit WORK_REQUEST frames received
     work_batches: int = 0  # WORK_BATCH frames sent
@@ -72,10 +87,6 @@ class HostStats:
     respawns: int = 0  # silent launches relaunched elsewhere
     late_joins: int = 0  # nodes admitted after the run started
     degraded_start: bool = False  # job admitted below full strength
-
-
-class WorkFunctionError(RuntimeError):
-    """The user's work function raised on a node; the job fails fast."""
 
 
 class HostLoader:
@@ -100,14 +111,19 @@ class HostLoader:
         expected_nodes: Sequence[str] | None = None,
         relaunch: Callable[[str, str], bool] | None = None,
     ):
+        if hasattr(spec, "as_pipeline"):
+            spec = spec.as_pipeline()
         spec.validate()
         self.spec = spec
+        self.stages = spec.stages
+        # node_id -> stage index; respawn replacements resolve via base id.
+        self._stage_by_node = dict(spec.node_assignments())
         self.timing = timing or TimingCollector()
         self.host = host
         self.membership = Membership(heartbeat or HeartbeatMonitor())
         self.register_timeout = register_timeout
         self.placement = placement or PlacementPolicy()
-        self.placement.validate(spec.nclusters)
+        self.placement.validate(spec.total_nodes)
         # Launch announcements: expected node ids become LAUNCHING records
         # at start(), which is what arms respawn tracking and late join.
         self.expected_nodes = list(expected_nodes or [])
@@ -129,7 +145,7 @@ class HostLoader:
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
-        self._listener.listen(spec.nclusters + 4)
+        self._listener.listen(spec.total_nodes + 4)
         self.port = self._listener.getsockname()[1]
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -198,31 +214,46 @@ class HostLoader:
             self._events.put(ev)
         self._early_events.clear()
 
-        details = spec.host_net.emit.e_details
+        S = len(self.stages)
+        details = spec.emit.e_details
         emit_state = details.initial_state()
         emit_done = False
-        next_id = 0
-        pending: collections.deque = collections.deque()  # requeued (id, obj)
-        inflight: dict[int, tuple[str, Any]] = {}
-        done_ids: set[int] = set()
-        r_details = spec.host_net.collector.r_details
+        # Per-stage farm state.  Item ids are per-stage (a stage-s result
+        # forwarded to stage s+1 gets a fresh id in s+1's id space), so
+        # dedup and loss accounting stay local to one hop.
+        next_id = [0] * S
+        pending: list[collections.deque] = [collections.deque()
+                                            for _ in range(S)]
+        inflight: list[dict[int, tuple[str, Any]]] = [{} for _ in range(S)]
+        done_ids: list[set[int]] = [set() for _ in range(S)]
+        r_details = spec.collector.r_details
         acc = r_details.init()
 
-        def next_item():
-            nonlocal emit_state, emit_done, next_id
-            if pending:
-                return pending.popleft()
-            if emit_done:
-                return None
-            obj, emit_state = details.create(emit_state)
-            if obj is None:
-                emit_done = True
-                return None
-            item = (next_id, obj)
-            next_id += 1
-            return item
+        def input_exhausted(s: int) -> bool:
+            """Stage ``s`` will receive no further input items."""
+            if s == 0:
+                return emit_done
+            return (input_exhausted(s - 1) and not pending[s - 1]
+                    and not inflight[s - 1])
 
-        def send_batch(rec: NodeRecord, batch: list) -> bool:
+        def stage_done(s: int) -> bool:
+            return input_exhausted(s) and not pending[s] and not inflight[s]
+
+        def next_item(s: int):
+            nonlocal emit_state, emit_done
+            if pending[s]:
+                return pending[s].popleft()
+            if s == 0 and not emit_done:
+                obj, emit_state = details.create(emit_state)
+                if obj is None:
+                    emit_done = True
+                    return None
+                item = (next_id[0], obj)
+                next_id[0] += 1
+                return item
+            return None  # upstream hasn't produced (or is exhausted)
+
+        def send_batch(rec: NodeRecord, batch: list, s: int) -> bool:
             try:
                 rec.conn.send(Frame(
                     FrameType.WORK_BATCH,
@@ -236,10 +267,10 @@ class HostLoader:
                 # are a *user payload* problem, not a node death — requeueing
                 # would loop forever, so they propagate and fail the job.
                 for item in reversed(batch):
-                    pending.appendleft(item)
+                    pending[s].appendleft(item)
                 return False
             for item_id, obj in batch:
-                inflight[item_id] = (rec.node_id, obj)
+                inflight[s][item_id] = (rec.node_id, obj)
             self.stats.work_batches += 1
             self.stats.max_batch = max(self.stats.max_batch, len(batch))
             return True
@@ -253,43 +284,49 @@ class HostLoader:
 
         def answer(node_id: str, credits: int) -> None:
             """Answer demand (the onrl server obligation), up to ``credits``
-            + any previously parked credits, in one WORK_BATCH."""
+            + any previously parked credits, in one WORK_BATCH drawn from the
+            node's own stage queue."""
             rec = self.membership.nodes.get(node_id)
             if rec is None or not rec.alive:
                 return
+            s = self._stage_of(node_id)
             want = credits + rec.credits
             rec.credits = 0
             if want <= 0:
                 return
             batch = []
             while len(batch) < want:
-                item = next_item()
+                item = next_item(s)
                 if item is None:
                     break
                 batch.append(item)
-            if batch and not send_batch(rec, batch):
+            if batch and not send_batch(rec, batch, s):
                 return  # dead pipe: items requeued, node about to be reaped
             leftover = want - len(batch)
             if leftover:
-                if emit_done and not inflight and not pending:
+                if stage_done(s):
                     send_ut(node_id)
                 else:
-                    rec.credits = leftover  # parked until items reappear
+                    rec.credits = leftover  # parked until items (re)appear
 
         def flush_waiting() -> None:
             for rec in list(self.membership.nodes.values()):
                 if rec.alive and rec.credits > 0:
                     answer(rec.node_id, 0)
 
+        def items_collected() -> int:
+            return len(done_ids[S - 1])
+
         def reap(now: float | None = None) -> None:
-            newly_dead = self.membership.reap(now, at_item=len(done_ids))
+            newly_dead = self.membership.reap(now, at_item=items_collected())
             for rec in newly_dead:
                 self.stats.deaths_detected += 1
-                lost = [iid for iid, (nid, _) in inflight.items()
+                s = self._stage_of(rec.node_id)
+                lost = [iid for iid, (nid, _) in inflight[s].items()
                         if nid == rec.node_id]
                 for iid in lost:
-                    _, obj = inflight.pop(iid)
-                    pending.append((iid, obj))
+                    _, obj = inflight[s].pop(iid)
+                    pending[s].append((iid, obj))
                     self.stats.redispatched += 1
             if newly_dead:
                 flush_waiting()
@@ -297,6 +334,7 @@ class HostLoader:
         def collect_results(node_id: str, results: list, credits: int) -> None:
             nonlocal acc
             self.stats.result_batches += 1
+            s = self._stage_of(node_id)
             for p in results:
                 if "error" in p:
                     raise WorkFunctionError(
@@ -307,30 +345,58 @@ class HostLoader:
                 # Always clear inflight — a redispatched item can complete
                 # twice (zombie result + survivor result) and both entries
                 # must go or termination stalls.
-                inflight.pop(p["id"], None)
-                if p["id"] in done_ids:
+                inflight[s].pop(p["id"], None)
+                if p["id"] in done_ids[s]:
                     self.stats.duplicates_dropped += 1
                 else:
-                    done_ids.add(p["id"])
-                    acc = r_details.collect(acc, p["value"])
-                    self.stats.items_total += 1
+                    done_ids[s].add(p["id"])
+                    if s + 1 < S:
+                        # The hop rendezvous: this result *is* stage s+1's
+                        # next work item (dedup above makes it exactly once).
+                        pending[s + 1].append((next_id[s + 1], p["value"]))
+                        next_id[s + 1] += 1
+                        self.stats.forwarded += 1
+                    else:
+                        acc = r_details.collect(acc, p["value"])
+                        self.stats.items_total += 1
                     rec = self.membership.nodes[node_id]
                     rec.items_done += 1
                     self.timing.count_item(node_id)
             if credits:
                 answer(node_id, credits)
-            if emit_done and not inflight and not pending:
-                flush_waiting()
+            # Forwarded items may satisfy parked downstream demand, and a
+            # stage draining may owe its nodes UT: both are answered here.
+            flush_waiting()
+
+        def check_liveness() -> None:
+            """A stage with obligations left but no live nodes can never
+            finish — fail fast instead of idling to job_timeout.  LAUNCHING
+            members keep a stage eligible: a degraded start's straggler (or
+            a respawned launch) may still register and carry the stage."""
+            for s in range(S):
+                if stage_done(s):
+                    continue
+                members = [rec for rec in self.membership.nodes.values()
+                           if self._stage_of(rec.node_id) == s]
+                if any(rec.alive or rec.state == LAUNCHING
+                       for rec in members):
+                    continue
+                raise RuntimeError(
+                    f"all node-loaders of stage {self.stages[s].name!r} "
+                    f"died with work outstanding ({len(inflight[s])} "
+                    f"in flight, {len(pending[s])} queued; no launch "
+                    "pending)"
+                )
 
         with self.timing.phase("host", "run"):
             while True:
-                if (emit_done and not inflight and not pending
-                        and self.membership.finished()):
+                if stage_done(S - 1) and self.membership.finished():
                     break
                 if deadline is not None and time.monotonic() > deadline:
                     raise TimeoutError(
                         f"cluster job exceeded {self.job_timeout}s "
-                        f"(done={len(done_ids)}, inflight={len(inflight)}, "
+                        f"(done={items_collected()}, "
+                        f"inflight={[len(f) for f in inflight]}, "
                         f"membership:\n{self.membership.describe()})"
                     )
                 try:
@@ -391,16 +457,20 @@ class HostLoader:
                         continue
                     self.stats.late_joins += 1
                     self._send_load(rec)
-                if not self.membership.alive_nodes() and (
-                        inflight or pending or not emit_done):
-                    raise RuntimeError(
-                        "all node-loaders died with work outstanding "
-                        f"({len(inflight)} in flight, {len(pending)} queued)"
-                    )
+                check_liveness()
 
         self._collect_wire_stats()
         self.result = r_details.finalise(acc)
         return self.result
+
+    def _stage_of(self, node_id: str) -> int:
+        """Stage index of a node (respawn replacements via their base id;
+        unknown elastic joiners default to stage 0)."""
+        s = self._stage_by_node.get(node_id)
+        if s is not None:
+            return s
+        base = node_id.split("r", 1)[0]
+        return self._stage_by_node.get(base, 0)
 
     # -- bootstrap helpers --------------------------------------------------
 
@@ -423,7 +493,7 @@ class HostLoader:
           registration wins, extra capacity is never turned away.
         """
         pol = self.placement
-        expected = self.spec.nclusters
+        expected = self.spec.total_nodes
         min_nodes = expected if pol.min_nodes is None else pol.min_nodes
         respawn_after = pol.respawn_after
         if respawn_after is None:
@@ -531,10 +601,12 @@ class HostLoader:
         The sender thread reports back through the event queue
         (``("loaded", node_id, ok)``) so membership stays single-writer.
         """
+        stage = self.stages[self._stage_of(rec.node_id)]
         payload = {
             "node_id": rec.node_id,
-            "workers": self.spec.workers_per_node,
-            "function": self.spec.node_net.group.function,
+            "workers": stage.workers_per_node,
+            "function": stage.function,
+            "stage": stage.name,
             "heartbeat_interval": self.membership.monitor.interval_s,
             "slowdown": float(self.slowdown.get(rec.node_id, 0.0)),
             "artifacts": self.artifacts,

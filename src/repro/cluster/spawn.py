@@ -96,6 +96,10 @@ class ProcessClusterApplication:
     error: BaseException | None = None  # set by run_async on failure
     _ran: bool = False
 
+    def __post_init__(self) -> None:
+        if hasattr(self.spec, "as_pipeline"):
+            self.spec = self.spec.as_pipeline()
+
     # -- compat views (the seed exposed Popen internals) --------------------
 
     @property
@@ -109,7 +113,8 @@ class ProcessClusterApplication:
         return {nid: h.logs() for nid, h in self.handles.items()}
 
     def node_ids(self) -> list[str]:
-        return [f"node{i}" for i in range(self.spec.nclusters)]
+        """Flat node ids, stage order (stage assignment lives in the spec)."""
+        return [nid for nid, _ in self.spec.node_assignments()]
 
     # -- lifecycle ----------------------------------------------------------
 

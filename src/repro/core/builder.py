@@ -60,6 +60,16 @@ class NodePlan:
     node_id: str
     address: str  # ip:port/channel — the only address a node needs
     workers: int
+    stage: str = ""  # pipeline stage this node serves ("" pre-pipeline)
+
+
+@dataclass
+class StagePlan:
+    """One pipeline stage's slice of the deployment."""
+
+    name: str
+    workers: int
+    nodes: list[NodePlan] = field(default_factory=list)
 
 
 @dataclass
@@ -68,6 +78,7 @@ class DeploymentPlan:
 
     host: str
     nodes: list[NodePlan]
+    stages: list[StagePlan] = field(default_factory=list)
     load_port: int = LOAD_PORT
     load_channel: int = LOAD_CHANNEL
     app_port: int = APP_PORT
@@ -92,6 +103,16 @@ class DeploymentPlan:
             "HNL: send node-specific NodeProcess to every node "
             "(code-loading channel; single source of class files)",
             "HNL: create HostProcess (Emit + Collect) on the host node",
+        ]
+        if len(self.stages) > 1:
+            chain = " -> ".join(
+                f"{sp.name}[{len(sp.nodes)}]" for sp in self.stages
+            )
+            steps.append(
+                f"HNL: route stage results host-side: emit -> {chain} "
+                "-> collect (per-stage credit accounting)"
+            )
+        steps += [
             "ALL: application net channels — input ends created before output "
             "ends; synchronisation messages on the loading network enforce "
             "the order",
@@ -107,8 +128,10 @@ class DeploymentPlan:
             f"(load port {self.load_port}, app port {self.app_port})"
         ]
         for np_ in self.nodes:
+            stage = f"  stage={np_.stage}" if np_.stage else ""
             lines.append(
-                f"  node {np_.node_id}: {np_.address}  workers={np_.workers}"
+                f"  node {np_.node_id}: {np_.address}  "
+                f"workers={np_.workers}{stage}"
             )
         lines.append("load order:")
         for i, s in enumerate(self.load_order()):
@@ -244,27 +267,76 @@ class ClusterBuilder:
 
     # -- emit/cluster/collect application path -------------------------------
 
-    def deployment_plan(self, spec: ClusterSpec) -> DeploymentPlan:
-        spec.validate()
-        nodes = [
-            NodePlan(
-                node_id=f"node{i}",
-                address=f"192.168.1.{100 + i}:{LOAD_PORT}/{LOAD_CHANNEL}",
-                workers=spec.workers_per_node,
-            )
-            for i in range(spec.nclusters)
-        ]
-        return DeploymentPlan(host=spec.host, nodes=nodes)
+    def deployment_plan(
+        self,
+        spec,
+        *,
+        hosts: Sequence[str] | None = None,
+        bind_host: str | None = None,
+        launcher: Any = None,
+    ) -> DeploymentPlan:
+        """Derive the per-stage deployment plan for a spec.
 
-    def build_application(self, spec: ClusterSpec, *, backend: str = "threads",
+        Node addresses come from the deployment layer when it is known:
+        ``hosts=`` (the ssh fan-out shorthand) or a launcher exposing
+        ``.hosts`` assigns machines round-robin exactly as the launcher
+        will; otherwise ``bind_host`` (every local node-loader dials it).
+        With no deployment information at all — a plan derived from the
+        spec alone — documentation-placeholder addresses are used, as the
+        paper's §4 walkthrough does.
+        """
+        pipe = spec.as_pipeline() if hasattr(spec, "as_pipeline") else spec
+        pipe.validate()
+        machines = list(hosts) if hosts else list(
+            getattr(launcher, "hosts", None) or []
+        )
+
+        def addr_host(i: int) -> str:
+            if machines:
+                return machines[i % len(machines)]
+            if bind_host:
+                # Local node-loaders dial the host's bind address; an
+                # unroutable wildcard bind resolves to loopback for them.
+                return "127.0.0.1" if bind_host == "0.0.0.0" else bind_host
+            return f"192.168.1.{100 + i}"  # placeholder: deployment unknown
+
+        nodes: list[NodePlan] = []
+        stage_plans: list[StagePlan] = []
+        i = 0
+        for st in pipe.stages:
+            sp = StagePlan(name=st.name, workers=st.workers_per_node)
+            for _ in range(st.nclusters):
+                np_ = NodePlan(
+                    node_id=f"node{i}",
+                    address=f"{addr_host(i)}:{LOAD_PORT}/{LOAD_CHANNEL}",
+                    workers=st.workers_per_node,
+                    stage=st.name if len(pipe.stages) > 1 else "",
+                )
+                nodes.append(np_)
+                sp.nodes.append(np_)
+                i += 1
+            stage_plans.append(sp)
+        return DeploymentPlan(host=pipe.host, nodes=nodes, stages=stage_plans)
+
+    def build_application(self, spec, *, backend: str = "threads",
                           **backend_options):
-        """Wire the Figure-2 network and return a runnable application.
+        """Wire the process network and return a runnable application.
+
+        ``spec`` is a :class:`~repro.core.dsl.ClusterSpec` (the paper's
+        emit/cluster/collect shape) or a
+        :class:`~repro.core.dsl.PipelineSpec` (one emit, N chained stages,
+        one collect); a ClusterSpec is normalised to its one-stage pipeline
+        view, so both backends run one code path.
 
         Backends (all run the *same* spec with zero user-code changes):
 
         * ``"threads"`` — threads + rendezvous queues in one process
           (``repro.runtime.local``; the paper's §6.1 single-host
-          confidence-building mode).
+          confidence-building mode).  One option:
+          ``readonly_delivery=True`` hands work functions read-only
+          ndarray views, mirroring the cluster backend's zero-copy
+          delivery semantics so in-place mutation bugs surface on one
+          host.
         * ``"cluster"`` — real OS processes connected by TCP sockets via the
           Host-Node-Loader / Node-Loader bootstrap of §4 / Figure 1
           (``repro.cluster``).  ``backend_options`` are forwarded to
@@ -288,23 +360,34 @@ class ClusterBuilder:
 
         Runtimes are imported lazily to keep core dependency-free.
         """
-        spec.validate()
-        plan = self.deployment_plan(spec)
+        pipe = spec.as_pipeline() if hasattr(spec, "as_pipeline") else spec
+        pipe.validate()
         if backend == "threads":
+            readonly = bool(backend_options.pop("readonly_delivery", False))
             if backend_options:
                 raise TypeError(
-                    f"threads backend takes no options, got {sorted(backend_options)}"
+                    f"threads backend takes no options (beyond "
+                    f"readonly_delivery), got {sorted(backend_options)}"
                 )
             from repro.runtime.local import LocalClusterApplication
 
             return LocalClusterApplication(
-                spec=spec, plan=plan, timing=self.timing
+                spec=pipe, plan=self.deployment_plan(pipe),
+                timing=self.timing, readonly_delivery=readonly,
             )
         if backend == "cluster":
             from repro.cluster.spawn import ProcessClusterApplication
 
+            # The plan reflects the actual deployment layer: hosts=/launcher
+            # machine assignments, or the bind address local loaders dial.
+            plan = self.deployment_plan(
+                pipe,
+                hosts=backend_options.get("hosts"),
+                bind_host=backend_options.get("bind_host", "127.0.0.1"),
+                launcher=backend_options.get("launcher"),
+            )
             return ProcessClusterApplication(
-                spec=spec, plan=plan, timing=self.timing, **backend_options
+                spec=pipe, plan=plan, timing=self.timing, **backend_options
             )
         raise ValueError(
             f"unknown backend {backend!r}; expected 'threads' or 'cluster'"

@@ -157,3 +157,46 @@ class HostNetwork:
     onrl: OneNodeRequestedList
     afo: AnyFanOne
     collector: Collect
+
+
+@dataclass
+class StageNetwork:
+    """The record group of one pipeline stage.
+
+    The paper's network (Figure 2) is the one-stage special case; a stage
+    generalises it into a reusable hop: a host-side server (``onrl``) feeding
+    ``nclusters`` replicas of the node fragment (``node_net``), merged back
+    at the host by ``afo`` — whose output stream is either the next stage's
+    server input or the collector.  Every hop is therefore exactly the
+    client-server pattern whose deadlock/livelock freedom ``core.verify``
+    proves; ``PipelineSpec`` chains the hops.
+    """
+
+    name: str
+    nclusters: int
+    node_net: NodeNetwork
+    onrl: OneNodeRequestedList = field(default_factory=OneNodeRequestedList)
+    afo: AnyFanOne | None = None
+
+    def __post_init__(self) -> None:
+        if self.nclusters < 1:
+            raise ValueError(
+                f"stage {self.name!r}: nclusters must be >= 1, "
+                f"got {self.nclusters}"
+            )
+        if self.afo is None:
+            self.afo = AnyFanOne(sources=self.nclusters)
+        elif self.afo.sources != self.nclusters:
+            raise ValueError(
+                f"stage {self.name!r}: afo.sources must equal nclusters "
+                f"({self.afo.sources} != {self.nclusters}); the merge reads "
+                "one stream per node"
+            )
+
+    @property
+    def workers_per_node(self) -> int:
+        return self.node_net.group.workers
+
+    @property
+    def function(self) -> Callable[[Any], Any]:
+        return self.node_net.group.function

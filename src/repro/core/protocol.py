@@ -2,21 +2,26 @@
 
 This is a direct transliteration of the paper's CSPm specification into a
 labelled-transition-system (LTS) form that ``core.verify`` can exhaustively
-check, generalised from the paper's ``W = 1`` worker per node to ``W >= 1``
-(the deployed network of Figure 2 has ``cores`` workers behind every
-``nrfa``).
+check, generalised two ways beyond the paper: from ``W = 1`` worker per node
+to ``W >= 1`` (the deployed network of Figure 2 has ``cores`` workers behind
+every ``nrfa``), and from one cluster stage to an ordered *pipeline* of
+stages (``PipelineSpec``) — each stage's reducer feeds the next stage's
+server exactly as Emit feeds the first, so every hop repeats the same
+client-server pattern.
 
-Processes and channels (paper Figure 3):
+Processes and channels (paper Figure 3, channels now stage-indexed):
 
-    Emit --a--> Server(onrl) --c.i--> Client_i(nrfa) --d.i--> Worker_{i,w}
-                      ^------b.i--------|
-    Worker_{i,w} --e.i--> Reducer(afoc+afo) --f--> Collect --finished--> env
+    Emit --a.0--> Server_0 --c.0.i--> Client_0i --d.0.i--> Worker_0iw
+                     ^-----b.0.i---------|
+    Worker_0iw --e.0.i--> Reducer_0 --a.1--> Server_1 --...--> Reducer_{S-1}
+    Reducer_{S-1} --f--> Collect --finished--> env
 
 All channels are synchronous, unbuffered and unidirectional (CSP semantics:
 a communication happens only when writer and reader are simultaneously
-ready).  Channels ``a..f`` are hidden when checking refinement against
-``TestSystem = finished -> TestSystem``; ``finished`` is the only visible
-event — exactly the setup of Listing 3 lines 50-58.
+ready).  The hidden channels are everything except ``finished`` when
+checking refinement against ``TestSystem = finished -> TestSystem`` —
+exactly the setup of Listing 3 lines 50-58, with ``a..f`` now the union over
+stages.
 
 NOTE — paper erratum: Listing 3 line 28 reads ``Server_End(y) = b?y.S ->
 c!y.UT -> if y == N then SKIP else Server_End(y+1)``.  Taken literally, with
@@ -94,20 +99,26 @@ class EmitProc(Process):
             return []
         _, k = state
         if k < self.num_objects:
-            return [Output(("a",), k, ("emit", k + 1))]
-        return [Output(("a",), UT, SKIP)]
+            return [Output(("a", 0), k, ("emit", k + 1))]
+        return [Output(("a", 0), UT, SKIP)]
 
 
 class ServerProc(Process):
     """The ``onrl`` server {3:24-29} (with the line-28 erratum corrected).
 
-    ``literal_paper_model=True`` reproduces Listing 3 exactly (including the
-    off-by-one) so the verifier can exhibit the deadlock.
+    ``stage`` indexes which pipeline hop this server distributes for: it
+    reads ``a.stage`` (the emit stream for stage 0, the previous stage's
+    reducer output otherwise) and serves its own clients on
+    ``b.stage.i``/``c.stage.i``.  ``literal_paper_model=True`` reproduces
+    Listing 3 exactly (including the off-by-one) so the verifier can exhibit
+    the deadlock.
     """
 
-    def __init__(self, nclusters: int, literal_paper_model: bool = False):
-        self.name = "server"
+    def __init__(self, nclusters: int, stage: int = 0,
+                 literal_paper_model: bool = False):
+        self.name = f"server{stage}"
         self.n = nclusters
+        self.s = stage
         self.literal = literal_paper_model
 
     def initial(self) -> State:
@@ -119,26 +130,27 @@ class ServerProc(Process):
             def accept(o: Any) -> State:
                 return ("end", 0) if o == UT else ("have", o)
 
-            return [Input(("a",), accept)]
+            return [Input(("a", self.s), accept)]
         if state[0] == "have":
             # Server_Choice(o) = [] x : {0..N-1} @ Service(x, o); Service
             # begins b?i.S.
             o = state[1]
             return [
-                Input(("b", i), lambda _s, i=i, o=o: ("serve", i, o))
+                Input(("b", self.s, i), lambda _s, i=i, o=o: ("serve", i, o))
                 for i in range(self.n)
             ]
         if state[0] == "end":
             # Server_End(y) = b?y.S -> c!y.UT -> ...
             y = state[1]
             if y < self.n:
-                return [Input(("b", y), lambda _s, y=y: ("end_serve", y))]
+                return [Input(("b", self.s, y),
+                              lambda _s, y=y: ("end_serve", y))]
         return []
 
     def outputs(self, state: State) -> list[Output]:
         if state and state[0] == "serve":
             _, i, o = state
-            return [Output(("c", i), o, ("idle",))]
+            return [Output(("c", self.s, i), o, ("idle",))]
         if state and state[0] == "end_serve":
             y = state[1]
             if self.literal:
@@ -146,7 +158,7 @@ class ServerProc(Process):
                 nxt = SKIP if y == self.n else ("end", y + 1)
             else:
                 nxt = SKIP if y == self.n - 1 else ("end", y + 1)
-            return [Output(("c", y), UT, nxt)]
+            return [Output(("c", self.s, y), UT, nxt)]
         return []
 
 
@@ -161,9 +173,10 @@ class ClientProc(Process):
     server can never be blocked by a node with an idle worker (paper §5).
     """
 
-    def __init__(self, i: int, workers: int):
-        self.name = f"client{i}"
+    def __init__(self, i: int, workers: int, stage: int = 0):
+        self.name = f"client{stage}.{i}"
         self.i = i
+        self.s = stage
         self.workers = workers
 
     def initial(self) -> State:
@@ -171,56 +184,66 @@ class ClientProc(Process):
 
     def outputs(self, state: State) -> list[Output]:
         if state == ("req",):
-            return [Output(("b", self.i), "S", ("wait",))]
+            return [Output(("b", self.s, self.i), "S", ("wait",))]
         if state and state[0] == "deliver":
             o = state[1]
             if o == UT:
                 # First of W terminators — one per worker behind this client.
                 nxt = SKIP if self.workers == 1 else ("term", 1)
-                return [Output(("d", self.i), UT, nxt)]
-            return [Output(("d", self.i), o, ("req",))]
+                return [Output(("d", self.s, self.i), UT, nxt)]
+            return [Output(("d", self.s, self.i), o, ("req",))]
         if state and state[0] == "term":
             w = state[1]
             nxt = SKIP if w + 1 == self.workers else ("term", w + 1)
-            return [Output(("d", self.i), UT, nxt)]
+            return [Output(("d", self.s, self.i), UT, nxt)]
         return []
 
     def inputs(self, state: State) -> list[Input]:
         if state == ("wait",):
-            return [Input(("c", self.i), lambda o: ("deliver", o))]
+            return [Input(("c", self.s, self.i), lambda o: ("deliver", o))]
         return []
 
 
 class WorkerProc(Process):
     """Worker {3:35-36}: d?i.o -> (e!i.o ->) with UT termination."""
 
-    def __init__(self, i: int, w: int):
-        self.name = f"worker{i}.{w}"
+    def __init__(self, i: int, w: int, stage: int = 0):
+        self.name = f"worker{stage}.{i}.{w}"
         self.i = i
+        self.s = stage
 
     def initial(self) -> State:
         return ("work",)
 
     def inputs(self, state: State) -> list[Input]:
         if state == ("work",):
-            return [Input(("d", self.i), lambda o: ("fwd", o))]
+            return [Input(("d", self.s, self.i), lambda o: ("fwd", o))]
         return []
 
     def outputs(self, state: State) -> list[Output]:
         if state and state[0] == "fwd":
             o = state[1]
             nxt = SKIP if o == UT else ("work",)
-            return [Output(("e", self.i), o, nxt)]
+            return [Output(("e", self.s, self.i), o, nxt)]
         return []
 
 
 class ReducerProc(Process):
     """Reducer {3:39-45}, generalised: forwards non-UT objects from any e.i,
-    counts ``N*W`` UTs (one per worker), then emits a single f!UT."""
+    counts ``N*W`` UTs (one per worker), then emits a single terminal UT.
 
-    def __init__(self, nclusters: int, workers: int):
-        self.name = "reducer"
+    The final stage's reducer writes ``f`` (into Collect, as in the paper);
+    an intermediate stage's reducer writes ``a.(s+1)`` — it *is* the next
+    stage's Emit, which is the whole compositional argument: each hop sees
+    upstream only as a well-behaved emit stream.
+    """
+
+    def __init__(self, nclusters: int, workers: int, stage: int = 0,
+                 last: bool = True):
+        self.name = f"reducer{stage}"
         self.n = nclusters
+        self.s = stage
+        self.out_chan: Hashable = ("f",) if last else ("a", stage + 1)
         self.remaining = nclusters * workers
 
     def initial(self) -> State:
@@ -235,15 +258,15 @@ class ReducerProc(Process):
                     return ("fwd_ut",) if k == 1 else ("read", k - 1)
                 return ("fwd", o, k)
 
-            return [Input(("e", i), accept) for i in range(self.n)]
+            return [Input(("e", self.s, i), accept) for i in range(self.n)]
         return []
 
     def outputs(self, state: State) -> list[Output]:
         if state and state[0] == "fwd":
             _, o, k = state
-            return [Output(("f",), o, ("read", k))]
+            return [Output(self.out_chan, o, ("read", k))]
         if state == ("fwd_ut",):
-            return [Output(("f",), UT, SKIP)]
+            return [Output(self.out_chan, UT, SKIP)]
         return []
 
 
@@ -289,16 +312,35 @@ class ProtocolNetwork:
         num_objects: int = 5,
         literal_paper_model: bool = False,
     ) -> "ProtocolNetwork":
-        procs: list[Process] = [
-            EmitProc(num_objects),
-            ServerProc(nclusters, literal_paper_model=literal_paper_model),
-        ]
-        for i in range(nclusters):
-            procs.append(ClientProc(i, workers_per_node))
-        for i in range(nclusters):
-            for w in range(workers_per_node):
-                procs.append(WorkerProc(i, w))
-        procs.append(ReducerProc(nclusters, workers_per_node))
+        return ProtocolNetwork.build_pipeline(
+            [(nclusters, workers_per_node)],
+            num_objects,
+            literal_paper_model=literal_paper_model,
+        )
+
+    @staticmethod
+    def build_pipeline(
+        stage_shapes: list[tuple[int, int]],
+        num_objects: int = 5,
+        literal_paper_model: bool = False,
+    ) -> "ProtocolNetwork":
+        """The chained System: one (server, clients, workers, reducer) group
+        per ``(nclusters, workers_per_node)`` stage shape, reducer *s* wired
+        to server *s+1*; a single-entry list is Listing 3 verbatim."""
+        if not stage_shapes:
+            raise ValueError("pipeline needs at least one stage shape")
+        procs: list[Process] = [EmitProc(num_objects)]
+        last = len(stage_shapes) - 1
+        for s, (n, w) in enumerate(stage_shapes):
+            procs.append(
+                ServerProc(n, stage=s, literal_paper_model=literal_paper_model)
+            )
+            for i in range(n):
+                procs.append(ClientProc(i, w, stage=s))
+            for i in range(n):
+                for wi in range(w):
+                    procs.append(WorkerProc(i, wi, stage=s))
+            procs.append(ReducerProc(n, w, stage=s, last=(s == last)))
         procs.append(CollectProc())
         return ProtocolNetwork(processes=procs)
 

@@ -25,6 +25,15 @@ except ImportError:  # pragma: no cover - cluster package absent
 FailureKind = Literal["crash", "node_loss", "straggler"]
 
 
+class WorkFunctionError(RuntimeError):
+    """The user's work function raised inside a worker; the job fails fast.
+
+    Shared by both backends so a spec validated on the threads runtime
+    (paper §6.1 single-host confidence building) fails with the same
+    exception type it would on the real cluster.
+    """
+
+
 class SimulatedNodeFailure(RuntimeError):
     def __init__(self, step: int, kind: FailureKind, node: int):
         super().__init__(f"simulated {kind} of node {node} at step {step}")

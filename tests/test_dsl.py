@@ -3,7 +3,7 @@
 import pytest
 
 from repro.core.builder import ClusterBuilder
-from repro.core.dsl import ClusterSpec, parse_cgpp
+from repro.core.dsl import ClusterSpec, Pipeline, PipelineSpec, parse_cgpp
 from repro.core.processes import EmitDetails, ResultDetails
 
 
@@ -119,6 +119,186 @@ def test_cgpp_missing_collect_section():
         parse_cgpp("//@emit 1.2.3.4\n//@cluster 2\nx = 1\n")
     with pytest.raises(SyntaxError, match="missing //@emit"):
         parse_cgpp("x = 1\ny = 2\n")
+
+
+# ---------------------------------------------------------------------------
+# the //@stage grammar (PipelineSpec front end)
+# ---------------------------------------------------------------------------
+
+_EMIT_SECTION = """
+//@emit 10.0.0.1
+d = DataDetails(name='r', init=lambda n: (0, n), init_data=(12,),
+                create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0]+1, s[1])))
+emit = Emit(e_details=d)
+"""
+
+_COLLECT_SECTION = """
+//@collect
+rd = ResultDetails(name='sum', init=lambda: 0, collect=lambda a, x: a + x)
+collector = Collect(r_details=rd)
+"""
+
+
+def test_stage_grammar_parses_and_runs_a_pipeline():
+    text = (
+        "clusters = 2\n" + _EMIT_SECTION
+        + "//@stage square clusters\n"
+        + "group = AnyGroupAny(workers=2, function=lambda x: x * x)\n"
+        + "//@stage inc 1\n"
+        + "group = AnyGroupAny(workers=1, function=lambda x: x + 1)\n"
+        + _COLLECT_SECTION
+    )
+    spec = parse_cgpp(text)
+    assert isinstance(spec, PipelineSpec)
+    assert [(s.name, s.nclusters, s.workers_per_node) for s in spec.stages] \
+        == [("square", 2, 2), ("inc", 1, 1)]
+    assert spec.host == "10.0.0.1"
+    app = ClusterBuilder().build_application(spec)
+    assert app.run() == sum(i * i + 1 for i in range(12))
+
+
+def test_legacy_cluster_section_equals_one_stage_pipeline():
+    """//@cluster N is exactly a single anonymous stage: the parsed
+    ClusterSpec's pipeline view matches the //@stage parse structurally and
+    produces the same result."""
+    work = "lambda x: 3 * x"
+    legacy = parse_cgpp(
+        "cores = 2\n" + _EMIT_SECTION
+        + "onrl = OneNodeRequestedList()\n"
+        + "//@cluster 2\n"
+        + "nrfa = NodeRequestingFanAny(destinations=cores)\n"
+        + f"group = AnyGroupAny(workers=cores, function={work})\n"
+        + "afoc = AnyFanOne(sources=cores)\n"
+        + _COLLECT_SECTION
+        + "afo = AnyFanOne(sources=2)\n"
+    )
+    staged = parse_cgpp(
+        "cores = 2\n" + _EMIT_SECTION
+        + "//@stage cluster 2\n"
+        + f"group = AnyGroupAny(workers=cores, function={work})\n"
+        + _COLLECT_SECTION
+    )
+    assert isinstance(legacy, ClusterSpec) and isinstance(staged, PipelineSpec)
+    lp = legacy.as_pipeline()
+    assert lp.nstages == staged.nstages == 1
+    assert lp.stages[0].name == staged.stages[0].name == "cluster"
+    assert lp.stages[0].nclusters == staged.stages[0].nclusters
+    assert (lp.stages[0].workers_per_node
+            == staged.stages[0].workers_per_node)
+    r1 = ClusterBuilder().build_application(legacy).run()
+    r2 = ClusterBuilder().build_application(staged).run()
+    assert r1 == r2 == sum(3 * i for i in range(12))
+
+
+def test_stage_annotation_error_paths_name_the_offending_line():
+    # //@stage without a node count -> malformed annotation
+    with pytest.raises(SyntaxError,
+                       match=r"malformed annotation.*//@stage square"):
+        parse_cgpp("//@emit 1.2.3.4\n//@stage square\n//@collect\n")
+    # duplicate stage names
+    with pytest.raises(SyntaxError, match=r"line 3: .*duplicate //@stage 'a'"):
+        parse_cgpp("//@emit 1.2.3.4\n//@stage a 1\n//@stage a 2\n//@collect\n")
+    # //@stage before //@emit
+    with pytest.raises(SyntaxError, match=r"line 1: .*must follow the emit"):
+        parse_cgpp("//@stage a 1\n//@emit 1.2.3.4\n//@collect\n")
+    # //@stage after //@collect
+    with pytest.raises(SyntaxError, match=r"line 4: .*must precede"):
+        parse_cgpp("//@emit 1.2.3.4\n//@stage a 1\n//@collect\n//@stage b 1\n")
+    # mixing the grammars, either order
+    with pytest.raises(SyntaxError, match=r"line 3: .*cannot mix"):
+        parse_cgpp("//@emit 1.2.3.4\n//@cluster 2\n//@stage a 1\n//@collect\n")
+    with pytest.raises(SyntaxError, match=r"line 3: .*cannot mix"):
+        parse_cgpp("//@emit 1.2.3.4\n//@stage a 1\n//@cluster 2\n//@collect\n")
+    # an unevaluable node count names its stage line
+    with pytest.raises(SyntaxError, match=r"line 3: //@stage a: cannot"):
+        parse_cgpp(
+            "//@emit 1.2.3.4\n"
+            "emit = Emit(e_details=DataDetails(name='e', create=lambda s: (None, s)))\n"
+            "//@stage a nope\n//@collect\n"
+        )
+
+
+def test_stage_sections_must_define_their_records():
+    base = "//@emit 1.2.3.4\nemit = Emit(e_details=DataDetails(name='e', create=lambda s: (None, s)))\n"
+    tail = "//@collect\ncollector = Collect(r_details=ResultDetails(name='c', collect=lambda a, x: a))\n"
+    with pytest.raises(SyntaxError, match=r"stage 'a' must define exactly one AnyGroupAny"):
+        parse_cgpp(base + "//@stage a 1\nx = 1\n" + tail)
+    with pytest.raises(SyntaxError, match=r"collect section must define exactly one Collect"):
+        parse_cgpp(
+            base + "//@stage a 1\ngroup = AnyGroupAny(workers=1, function=lambda x: x)\n"
+            + "//@collect\nx = 1\n"
+        )
+
+
+def test_stage_sections_accept_prebuilt_namespace_records():
+    """A record supplied via namespace= belongs to the section that binds
+    it — not to whichever section executed first (regression)."""
+    from repro.core.processes import AnyGroupAny, Collect, Emit
+
+    emit_rec = Emit(e_details=EmitDetails(
+        name="r", init=lambda n: (0, n), init_data=(6,),
+        create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0] + 1, s[1])),
+    ))
+    group_rec = AnyGroupAny(workers=1, function=lambda x: x * 10)
+    coll_rec = Collect(r_details=ResultDetails(
+        name="sum", init=lambda: 0, collect=lambda a, x: a + x))
+    spec = parse_cgpp(
+        "//@emit 1.2.3.4\n"
+        "emit = EMIT_REC\n"
+        "//@stage tens 1\n"
+        "group = GROUP_REC\n"
+        "//@collect\n"
+        "collector = COLL_REC\n",
+        namespace={"EMIT_REC": emit_rec, "GROUP_REC": group_rec,
+                   "COLL_REC": coll_rec},
+    )
+    assert spec.stages[0].node_net.group is group_rec
+    assert spec.emit is emit_rec and spec.collector is coll_rec
+    assert ClusterBuilder().build_application(spec).run() \
+        == sum(10 * i for i in range(6))
+
+
+def test_pipeline_roundtrips_between_fluent_api_and_cgpp():
+    """The fluent API and the //@stage grammar are two spellings of the same
+    PipelineSpec: identical structure when fed identical callables."""
+    square = lambda x: x * x  # noqa: E731
+    inc = lambda x: x + 1  # noqa: E731
+    emit = EmitDetails(
+        name="r", init=lambda n: (0, n), init_data=(9,),
+        create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0] + 1, s[1])),
+    )
+    coll = ResultDetails(name="sum", init=lambda: 0,
+                         collect=lambda a, x: a + x)
+
+    fluent = (Pipeline(host="10.0.0.1")
+              .emit(emit)
+              .stage(square, nodes=2, workers=2, name="square")
+              .stage(inc, nodes=1, workers=1, name="inc")
+              .collect(coll)
+              .build())
+    parsed = parse_cgpp(
+        "//@emit 10.0.0.1\n"
+        "emit = Emit(e_details=EMIT)\n"
+        "//@stage square 2\n"
+        "group = AnyGroupAny(workers=2, function=SQUARE)\n"
+        "//@stage inc 1\n"
+        "group = AnyGroupAny(workers=1, function=INC)\n"
+        "//@collect\n"
+        "collector = Collect(r_details=COLL)\n",
+        namespace={"EMIT": emit, "SQUARE": square, "INC": inc, "COLL": coll},
+    )
+    assert fluent.host == parsed.host
+    assert [(s.name, s.nclusters, s.workers_per_node) for s in fluent.stages] \
+        == [(s.name, s.nclusters, s.workers_per_node) for s in parsed.stages]
+    assert [s.function for s in fluent.stages] \
+        == [s.function for s in parsed.stages]
+    assert fluent.emit.e_details is emit and parsed.emit.e_details is emit
+    assert fluent.collector.r_details is coll
+    assert parsed.collector.r_details is coll
+    # identical results, too
+    expected = sum(i * i + 1 for i in range(9))
+    assert ClusterBuilder().build_application(fluent).run() == expected
+    assert ClusterBuilder().build_application(parsed).run() == expected
 
 
 def test_spec_validation_catches_mismatched_fanin():

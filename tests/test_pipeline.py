@@ -1,0 +1,317 @@
+"""The generalised spec API: PipelineSpec, the fluent builder, multi-stage
+execution on both backends, per-stage deployment plans and the
+readonly-delivery parity switch.
+
+The one-stage special case is covered by the pre-existing ClusterSpec tests
+(unmodified); this module exercises what the generalisation adds.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.builder import ClusterBuilder
+from repro.core.dsl import ClusterSpec, Pipeline, PipelineSpec, Stage
+from repro.core.processes import EmitDetails, ResultDetails
+from repro.core.verify import verify_pipeline, verify_spec
+from repro.runtime.failures import WorkFunctionError
+
+# Fast liveness settings for cluster-backend tests (as in test_cluster).
+FAST = dict(heartbeat_interval=0.1, heartbeat_misses=4)
+
+
+def _range_emit(n):
+    return EmitDetails(
+        name="range",
+        init=lambda limit: (0, limit),
+        init_data=(n,),
+        create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0] + 1, s[1])),
+    )
+
+
+def _sum_collect():
+    return ResultDetails(name="sum", init=lambda: 0,
+                         collect=lambda a, x: a + x)
+
+
+def _two_stage(n_items=30, square_nodes=2, square_workers=2):
+    return (Pipeline(host="127.0.0.1")
+            .emit(_range_emit(n_items))
+            .stage(lambda x: x * x, nodes=square_nodes,
+                   workers=square_workers, name="square")
+            .stage(lambda x: x + 1, nodes=1, workers=2, name="inc")
+            .collect(_sum_collect())
+            .build())
+
+
+# ---------------------------------------------------------------------------
+# construction + structure
+# ---------------------------------------------------------------------------
+
+
+def test_fluent_builder_produces_validated_pipeline():
+    spec = _two_stage()
+    assert spec.nstages == 2
+    assert spec.total_nodes == 3
+    assert [st.name for st in spec.stages] == ["square", "inc"]
+    assert spec.node_assignments() == [
+        ("node0", 0), ("node1", 0), ("node2", 1)
+    ]
+    # respawn replacements map through their base id; unknowns -> stage 0
+    assert spec.stage_of("node2r1") == 1
+    assert spec.stage_of("ws07-1234") == 0
+
+
+def test_fluent_builder_rejects_misuse():
+    with pytest.raises(ValueError, match="emit"):
+        Pipeline(host="h").stage(lambda x: x)
+    with pytest.raises(ValueError, match="missing"):
+        Pipeline(host="h").emit(_range_emit(1)).build()
+    p = Pipeline(host="h").emit(_range_emit(1)).stage(lambda x: x, name="a")
+    with pytest.raises(ValueError, match="duplicate stage name"):
+        p.stage(lambda x: x, name="a")
+    p.collect(_sum_collect())
+    with pytest.raises(ValueError, match="precede collect"):
+        p.stage(lambda x: x)
+
+
+def test_cluster_spec_is_the_one_stage_special_case():
+    spec = ClusterSpec.simple(
+        host="10.0.0.1", nclusters=3, workers_per_node=2,
+        emit_details=_range_emit(5), work_function=lambda x: x,
+        result_details=_sum_collect(),
+    )
+    pipe = spec.as_pipeline()
+    assert pipe.nstages == 1
+    assert pipe.nclusters == 3 and pipe.workers_per_node == 2
+    # the very records, not copies: the wrapper is thin
+    assert pipe.stages[0].node_net is spec.node_net
+    assert pipe.stages[0].afo is spec.host_net.afo
+    assert pipe.host_net.emit is spec.host_net.emit
+    # and it collapses back
+    back = pipe.as_cluster_spec()
+    assert back.nclusters == 3 and back.host == "10.0.0.1"
+    back.validate()
+
+
+def test_multi_stage_pipeline_rejects_single_stage_accessors():
+    spec = _two_stage()
+    with pytest.raises(ValueError, match="one-stage"):
+        spec.nclusters
+    with pytest.raises(ValueError, match="one-stage"):
+        spec.workers_per_node
+
+
+# ---------------------------------------------------------------------------
+# execution — threads backend
+# ---------------------------------------------------------------------------
+
+
+def test_two_stage_pipeline_runs_on_threads():
+    n = 40
+    builder = ClusterBuilder()
+    app = builder.build_application(_two_stage(n))
+    assert app.run() == sum(i * i + 1 for i in range(n))
+    items = {t.node_id: t.items for t in builder.timing.nodes
+             if t.node_id.startswith("node")}
+    # stage square (node0, node1) shares the emit stream; stage inc (node2)
+    # processes every forwarded result.
+    assert items["node0"] + items["node1"] == n
+    assert items["node2"] == n
+
+
+def test_three_stage_pipeline_runs_on_threads():
+    n = 24
+    spec = PipelineSpec.simple(
+        host="h",
+        emit_details=_range_emit(n),
+        stages=[
+            Stage("a", lambda x: x + 1, nclusters=2, workers_per_node=1),
+            Stage("b", lambda x: x * 2, nclusters=1, workers_per_node=2),
+            Stage("c", lambda x: x - 3, nclusters=1, workers_per_node=1),
+        ],
+        result_details=_sum_collect(),
+    )
+    app = ClusterBuilder().build_application(spec)
+    assert app.run() == sum((i + 1) * 2 - 3 for i in range(n))
+
+
+def test_threads_work_function_error_fails_fast():
+    def bad(x):
+        if x == 3:
+            raise ValueError("item 3 is cursed")
+        return x
+
+    spec = ClusterSpec.simple(
+        host="h", nclusters=2, workers_per_node=1,
+        emit_details=_range_emit(10), work_function=bad,
+        result_details=_sum_collect(),
+    )
+    app = ClusterBuilder().build_application(spec)
+    with pytest.raises(WorkFunctionError, match="item 3 is cursed"):
+        app.run()
+
+
+# ---------------------------------------------------------------------------
+# execution — cluster backend (real subprocesses)
+# ---------------------------------------------------------------------------
+
+
+def test_two_stage_pipeline_matches_on_cluster_backend():
+    """Acceptance: the same two-stage spec, zero changes, over real
+    node-loader subprocesses — matching result, per-stage routing stats,
+    exactly-once, clean shutdown."""
+    n = 30
+    expected = sum(i * i + 1 for i in range(n))
+    threaded = ClusterBuilder().build_application(_two_stage(n)).run()
+    assert threaded == expected
+
+    builder = ClusterBuilder()
+    app = builder.build_application(
+        _two_stage(n), backend="cluster", job_timeout=120.0, **FAST
+    )
+    assert app.run() == expected
+
+    stats = app.host_loader.stats
+    assert stats.items_total == n  # final-stage results collected once each
+    assert stats.forwarded == n  # every stage-0 result re-entered as work
+    assert stats.duplicates_dropped == 0 and stats.deaths_detected == 0
+    assert len(app.processes) == 3
+    assert app.orphaned() == []
+    # stage inc's node processed the full stream
+    items = {t.node_id: t.items for t in builder.timing.nodes
+             if t.node_id.startswith("node")}
+    assert items["node0"] + items["node1"] == n
+    assert items["node2"] == n
+
+
+# ---------------------------------------------------------------------------
+# verification of the chained network
+# ---------------------------------------------------------------------------
+
+
+def test_verify_spec_on_two_stage_pipeline():
+    report = verify_spec(_two_stage())
+    assert report.ok, report.summary()
+    assert report.stage_shapes is not None and len(report.stage_shapes) == 2
+    assert "pipeline" in report.summary()
+
+
+def test_verify_pipeline_chained_assertions():
+    for shapes in ([(2, 1), (1, 1)], [(1, 1), (2, 1)], [(2, 1), (2, 1)]):
+        report = verify_pipeline(shapes, num_objects=3)
+        assert report.ok, report.summary()
+    # single-entry list is the paper's network verbatim
+    assert verify_pipeline([(2, 1)], num_objects=5).num_states > 1000
+
+
+# ---------------------------------------------------------------------------
+# deployment plan (per-stage, real addresses)
+# ---------------------------------------------------------------------------
+
+
+def test_deployment_plan_groups_nodes_per_stage():
+    plan = ClusterBuilder().deployment_plan(_two_stage())
+    assert [sp.name for sp in plan.stages] == ["square", "inc"]
+    assert [len(sp.nodes) for sp in plan.stages] == [2, 1]
+    assert plan.nodes[2].stage == "inc"
+    assert "stage=inc" in plan.describe()
+    assert any("per-stage credit accounting" in s for s in plan.load_order())
+
+
+def test_deployment_plan_derives_real_addresses():
+    spec = ClusterSpec.simple(
+        host="192.168.1.176", nclusters=3, workers_per_node=1,
+        emit_details=_range_emit(3), work_function=lambda x: x,
+        result_details=_sum_collect(),
+    )
+    builder = ClusterBuilder()
+    # hosts= assigns machines round-robin, exactly as SSHLauncher will
+    plan = builder.deployment_plan(spec, hosts=["ws01", "ws02"])
+    assert [n.address.split(":")[0] for n in plan.nodes] == [
+        "ws01", "ws02", "ws01"
+    ]
+    # a launcher exposing .hosts works the same way
+    class FakeLauncher:
+        hosts = ["wsA"]
+    plan = builder.deployment_plan(spec, launcher=FakeLauncher())
+    assert all(n.address.startswith("wsA:") for n in plan.nodes)
+    # local deployments dial the bind address (wildcard -> loopback)
+    plan = builder.deployment_plan(spec, bind_host="0.0.0.0")
+    assert all(n.address.startswith("127.0.0.1:") for n in plan.nodes)
+    # no deployment info at all: documentation placeholders (unchanged)
+    plan = builder.deployment_plan(spec)
+    assert plan.nodes[0].address.startswith("192.168.1.100:")
+
+
+def test_cluster_backend_plan_reflects_deployment():
+    app = ClusterBuilder().build_application(
+        _two_stage(4), backend="cluster"
+    )
+    # never started: just inspect the derived plan
+    assert all(n.address.startswith("127.0.0.1:") for n in app.plan.nodes)
+
+
+# ---------------------------------------------------------------------------
+# readonly delivery (threads/cluster semantic parity)
+# ---------------------------------------------------------------------------
+
+
+def _array_emit(n):
+    return EmitDetails(
+        name="arrays",
+        init=lambda limit: (0, limit),
+        init_data=(n,),
+        create=lambda s: ((None, s) if s[0] >= s[1]
+                          else (np.full(4, float(s[0])), (s[0] + 1, s[1]))),
+    )
+
+
+def _float_sum():
+    return ResultDetails(name="sum", init=lambda: 0.0,
+                         collect=lambda a, x: a + x)
+
+
+def test_readonly_delivery_hands_out_immutable_views():
+    def probe(x):
+        assert isinstance(x, np.ndarray)
+        return 0.0 if x.flags.writeable else 1.0
+
+    def make():
+        return ClusterSpec.simple(
+            host="127.0.0.1", nclusters=1, workers_per_node=2,
+            emit_details=_array_emit(6), work_function=probe,
+            result_details=_float_sum(),
+        )
+
+    # default threads backend: the original, writable array (documented)
+    assert ClusterBuilder().build_application(make()).run() == 0.0
+    # readonly_delivery: every delivery is an immutable view
+    assert ClusterBuilder().build_application(
+        make(), readonly_delivery=True
+    ).run() == 6.0
+
+
+def test_readonly_delivery_catches_cluster_mutation_bugs_single_host():
+    """The regression the option exists for: a work function that mutates
+    its input in place passes on the default threads backend but fails on
+    the cluster's zero-copy wire — readonly_delivery=True reproduces the
+    cluster failure on one host, same exception type."""
+
+    def mutating(x):
+        x[0] = -1.0  # in-place write
+        return float(x.sum())
+
+    def make():
+        return ClusterSpec.simple(
+            host="127.0.0.1", nclusters=1, workers_per_node=1,
+            emit_details=_array_emit(4), work_function=mutating,
+            result_details=_float_sum(),
+        )
+
+    # silently "works" on the default threads backend...
+    ClusterBuilder().build_application(make()).run()
+    # ...fails under readonly_delivery, like the cluster backend would
+    with pytest.raises(WorkFunctionError):
+        ClusterBuilder().build_application(
+            make(), readonly_delivery=True
+        ).run()
