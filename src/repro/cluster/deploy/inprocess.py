@@ -38,15 +38,20 @@ class ThreadNodeHandle(NodeHandle):
         self.killed = False
         self._exit: int | None = None
         self._log: list[str] = []
+        self._conn = None  # the node's FrameConnection, once it dialled
 
         def target() -> None:
             from repro.cluster.node_loader import run_node
+
+            def on_conn(conn) -> None:
+                self._conn = conn
 
             try:
                 if delay > 0.0:
                     time.sleep(delay)
                 record = run_node(connect_host, port, node_id=node_id,
-                                  connect_timeout=connect_timeout)
+                                  connect_timeout=connect_timeout,
+                                  on_conn=on_conn)
                 self._log.append(f"node-loader done: {record}")
                 self._exit = 0
             except BaseException as exc:
@@ -66,9 +71,15 @@ class ThreadNodeHandle(NodeHandle):
         return self.poll()
 
     def kill(self) -> None:
-        # Threads cannot be killed; the node dies when the host closes its
-        # connection.  Recording the intent keeps orphan accounting honest.
+        # Threads cannot be killed, but a *connected* node can be made dead
+        # to the cluster by severing its socket: heartbeats stop, the host
+        # reaps it and redispatches its in-flight work — a faithful
+        # mid-run crash for the service/failover tests.  An unconnected
+        # handle stays a "silent node" (the placement policy's problem).
         self.killed = True
+        conn = self._conn
+        if conn is not None:
+            conn.close()
 
     def logs(self) -> list[str]:
         return list(self._log)

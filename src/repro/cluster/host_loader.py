@@ -23,17 +23,41 @@ Bootstrap sequence (the load network):
    record (requirement 7) and the HNL folds results via the user's
    ResultDetails.
 
-Multi-stage routing (``PipelineSpec``): every node belongs to one stage;
-the host keeps *per-stage* pending/in-flight/dedup state and answers a
-node's credits only from its own stage's queue.  A RESULT_BATCH from a
-stage-*s* node is deduplicated and its values re-enter the host as fresh
-WORK items of stage *s+1* (the final stage folds into the collector) — the
-host is the rendezvous between hops, exactly as the chained CSP model has
-reducer *s* feeding server *s+1*.  Stage *s*'s input is exhausted once the
-emit stream (s = 0) or stage *s-1* (s > 0) has fully drained, at which
-point parked credits of stage-*s* nodes are answered with UT.  Exactly-once
-holds per stage: result-id dedup before forwarding means a redispatched
-zombie's duplicate can neither double-collect nor double-forward.
+Multi-job multiplexing (wire v2): the HNL is a *job dispatcher*, not a
+one-shot farm.  All per-farm state — per-stage pending/in-flight/dedup
+queues, the emit generator, the collector accumulator — lives in a
+:class:`JobState` keyed by the frame-header ``job_id``, so two jobs can
+interleave on the same node pool with exactly-once preserved per job.  The
+classic one-shot ``run()`` is simply "one pinned job admitted at
+construction, dispatch until it completes"; a warm
+:class:`~repro.cluster.service.ClusterService` instead constructs the
+HostLoader in *pool mode* (``spec=None, pool_nodes=N``) and drives
+``serve()`` on a background thread, feeding jobs in through
+``submit_job``.  Scheduling is FIFO-with-priority: parked node credits are
+answered from the highest-priority admitted job that has (a) pending items
+and (b) acked its LOAD on that node (``NodeRecord.jobs_loaded`` — work for
+a job never races ahead of its code).
+
+Warm code shipping: each stage function is cloudpickled once per job and
+addressed by digest.  The host mirrors every node's code-cache LRU
+(``NodeRecord.code_digests``, same capacity and touch order — frames
+arrive in send order on one TCP stream), so a resubmission of the same
+pipeline ships ``function=None`` and the node rebinds from cache: ~0ms
+load on top of the pool's ~0ms boot.
+
+Multi-stage routing (``PipelineSpec``): every one-shot node belongs to one
+stage; the host keeps *per-stage* pending/in-flight/dedup state and
+answers a node's credits only from its own stage's queue.  A RESULT_BATCH
+from a stage-*s* node is deduplicated and its values re-enter the host as
+fresh WORK items of stage *s+1* (the final stage folds into the collector)
+— the host is the rendezvous between hops, exactly as the chained CSP
+model has reducer *s* feeding server *s+1*.  Stage *s*'s input is
+exhausted once the emit stream (s = 0) or stage *s-1* (s > 0) has fully
+drained, at which point parked credits of stage-*s* nodes are answered
+with UT.  Exactly-once holds per stage *per job*: result-id dedup before
+forwarding means a redispatched zombie's duplicate can neither
+double-collect nor double-forward.  Pool-mode nodes are not pinned — any
+node serves any stage of any job (items carry their stage index ``s``).
 
 Beyond the paper: heartbeat liveness (``membership``) — a node-loader that
 dies mid-job is detected by missed beats, its in-flight items re-queued and
@@ -49,26 +73,29 @@ state).
 from __future__ import annotations
 
 import collections
+import hashlib
 import queue
 import socket
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 from repro.cluster.deploy.base import PlacementPolicy
 from repro.cluster.membership import LAUNCHING, Membership, NodeRecord
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
+    CODE_CACHE_SLOTS,
     LOAD_WIRE_CHANNEL,
     Frame,
     FrameConnection,
     FrameType,
+    dumps_code,
 )
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor, WorkFunctionError
 
-__all__ = ["HostLoader", "HostStats", "WorkFunctionError"]
+__all__ = ["HostLoader", "HostStats", "JobState", "WorkFunctionError"]
 
 
 @dataclass
@@ -89,12 +116,109 @@ class HostStats:
     degraded_start: bool = False  # job admitted below full strength
 
 
+class JobState:
+    """All farm state of one submitted job, keyed by its wire ``job_id``.
+
+    Exactly the per-stage state the one-shot host kept in run()-local
+    variables, plus lifecycle (``done``/``error``/``result``) so service
+    callers can wait on a job like a future.  Mutated only by the
+    dispatcher thread; ``done`` is the cross-thread completion signal.
+    """
+
+    def __init__(self, job_id: int, spec, *, priority: int = 0,
+                 pinned: bool = False, timeout: float | None = None):
+        if hasattr(spec, "as_pipeline"):
+            spec = spec.as_pipeline()
+        spec.validate()
+        self.job_id = job_id
+        self.spec = spec
+        self.priority = priority
+        self.pinned = pinned  # one-shot mode: nodes serve their own stage
+        self.timeout = timeout
+        self.S = len(spec.stages)
+        S = self.S
+        details = spec.emit.e_details
+        self._details = details
+        self.emit_state = details.initial_state()
+        self.emit_done = False
+        # Item ids are per-stage (a stage-s result forwarded to stage s+1
+        # gets a fresh id in s+1's id space), so dedup and loss accounting
+        # stay local to one hop.
+        self.next_id = [0] * S
+        self.pending: list[collections.deque] = [collections.deque()
+                                                 for _ in range(S)]
+        self.inflight: list[dict[int, tuple[str, Any]]] = [{}
+                                                           for _ in range(S)]
+        self.done_ids: list[set[int]] = [set() for _ in range(S)]
+        self.r_details = spec.collector.r_details
+        self.acc = self.r_details.init()
+        # Shipped code, one (digest, cloudpickle blob) per stage: pickled
+        # once per job, addressed by digest for the warm-cache LRU.
+        self.stage_code: list[tuple[str, bytes]] = []
+        for st in spec.stages:
+            blob = dumps_code(st.function)
+            self.stage_code.append((hashlib.sha256(blob).hexdigest(), blob))
+        # Lifecycle.
+        self.done = threading.Event()
+        self.error: BaseException | None = None
+        self.result: Any = None
+        self.deadline: float | None = None
+        self.submitted_at: float | None = None
+        self.first_result_at: float | None = None
+        self.items_collected = 0
+        # Warm-load accounting (per job, summed over nodes).
+        self.code_shipped = 0
+        self.code_cached = 0
+
+    # -- farm state machine -------------------------------------------------
+
+    def input_exhausted(self, s: int) -> bool:
+        """Stage ``s`` will receive no further input items."""
+        if s == 0:
+            return self.emit_done
+        return (self.input_exhausted(s - 1) and not self.pending[s - 1]
+                and not self.inflight[s - 1])
+
+    def stage_done(self, s: int) -> bool:
+        return (self.input_exhausted(s) and not self.pending[s]
+                and not self.inflight[s])
+
+    def next_item(self, s: int):
+        if self.pending[s]:
+            return self.pending[s].popleft()
+        if s == 0 and not self.emit_done:
+            obj, self.emit_state = self._details.create(self.emit_state)
+            if obj is None:
+                self.emit_done = True
+                return None
+            item = (self.next_id[0], obj)
+            self.next_id[0] += 1
+            return item
+        return None  # upstream hasn't produced (or is exhausted)
+
+    @property
+    def active(self) -> bool:
+        return not self.done.is_set()
+
+
 class HostLoader:
-    """Runs the host side of one emit/cluster/collect deployment."""
+    """Runs the host side of a node pool serving one or many jobs.
+
+    Two construction modes share one dispatcher:
+
+    * **one-shot** (the classic API): ``HostLoader(spec, ...)`` — the spec
+      becomes a *pinned* primary job admitted immediately; ``run()``
+      dispatches until it completes and returns the final result, sending
+      UT to each node as its stage drains.
+    * **pool** (the service): ``HostLoader(None, pool_nodes=N,
+      pool_workers=W, ...)`` — no job at boot; ``serve(stop)`` dispatches
+      jobs fed in via ``submit_job`` until ``stop`` is set, and nodes are
+      never UT'd on drain (credits park between jobs).
+    """
 
     def __init__(
         self,
-        spec,
+        spec=None,
         timing: TimingCollector | None = None,
         *,
         host: str = "127.0.0.1",
@@ -110,20 +234,33 @@ class HostLoader:
         placement: PlacementPolicy | None = None,
         expected_nodes: Sequence[str] | None = None,
         relaunch: Callable[[str, str], bool] | None = None,
+        pool_nodes: int | None = None,
+        pool_workers: int = 1,
     ):
-        if hasattr(spec, "as_pipeline"):
-            spec = spec.as_pipeline()
-        spec.validate()
+        if spec is not None:
+            if hasattr(spec, "as_pipeline"):
+                spec = spec.as_pipeline()
+            spec.validate()
+            self.stages = spec.stages
+            self._stage_by_node = dict(spec.node_assignments())
+            total = spec.total_nodes
+        else:
+            if pool_nodes is None:
+                raise TypeError(
+                    "pool mode (spec=None) requires pool_nodes=<count>"
+                )
+            self.stages = []
+            self._stage_by_node = {}
+            total = pool_nodes
         self.spec = spec
-        self.stages = spec.stages
-        # node_id -> stage index; respawn replacements resolve via base id.
-        self._stage_by_node = dict(spec.node_assignments())
+        self.pool_workers = pool_workers
+        self.total_nodes = total
         self.timing = timing or TimingCollector()
         self.host = host
         self.membership = Membership(heartbeat or HeartbeatMonitor())
         self.register_timeout = register_timeout
         self.placement = placement or PlacementPolicy()
-        self.placement.validate(spec.total_nodes)
+        self.placement.validate(total)
         # Launch announcements: expected node ids become LAUNCHING records
         # at start(), which is what arms respawn tracking and late join.
         self.expected_nodes = list(expected_nodes or [])
@@ -140,15 +277,77 @@ class HostLoader:
         self.stats = HostStats()
         self.result: Any = None
 
+        # Job table.  Written by the dispatcher (admission/completion) and
+        # by __init__ (the primary job); submit_job only allocates ids.
+        self._jobs: dict[int, JobState] = {}
+        self._job_seq = 0
+        self._job_lock = threading.Lock()
+        self._primary: JobState | None = None
+        if spec is not None:
+            self._primary = self._new_job(spec, pinned=True)
+            self._jobs[self._primary.job_id] = self._primary
+        self.pool_ready = threading.Event()
+        self.serve_error: BaseException | None = None
+
         self._events: queue.Queue = queue.Queue()
         self._early_events: list = []  # app frames arriving mid-bootstrap
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
-        self._listener.listen(spec.total_nodes + 4)
+        self._listener.listen(total + 4)
         self.port = self._listener.getsockname()[1]
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+
+    # -- job admission ------------------------------------------------------
+
+    def _new_job(self, spec, *, pinned: bool, priority: int = 0,
+                 timeout: float | None = None) -> JobState:
+        with self._job_lock:
+            self._job_seq += 1
+            jid = self._job_seq
+        return JobState(jid, spec, priority=priority, pinned=pinned,
+                        timeout=timeout)
+
+    def submit_job(self, spec, *, priority: int = 0,
+                   timeout: float | None = None) -> JobState:
+        """Queue one job for the dispatcher (service mode).
+
+        Returns its :class:`JobState` — wait on ``.done``, then read
+        ``.result`` / ``.error``.  Higher ``priority`` jobs are answered
+        first when nodes demand work; ties dispatch FIFO (job id order).
+        """
+        job = self._new_job(spec, pinned=False, priority=priority,
+                            timeout=timeout)
+        job.submitted_at = time.monotonic()
+        self._events.put(("submit", job))
+        return job
+
+    def _admit(self, job: JobState) -> None:
+        self._jobs[job.job_id] = job
+        if job.timeout is not None:
+            job.deadline = time.monotonic() + job.timeout
+        for rec in self.membership.nodes.values():
+            if rec.alive:
+                self._send_load(rec, job)
+
+    def _sources(self, rec: NodeRecord) -> Iterator[tuple[JobState, int]]:
+        """(job, stage) queues this node may draw from, scheduling order:
+        priority first, then admission order; within a job, later stages
+        first (drain the pipeline before widening it).  A job is skipped
+        until this node acked its LOAD — work never races ahead of code."""
+        jobs = sorted(
+            (j for j in self._jobs.values() if j.active and j.error is None),
+            key=lambda j: (-j.priority, j.job_id),
+        )
+        for job in jobs:
+            if job.job_id not in rec.jobs_loaded:
+                continue
+            if job.pinned:
+                yield job, self._stage_of(rec.node_id)
+            else:
+                for s in range(job.S - 1, -1, -1):
+                    yield job, s
 
     # -- bootstrap ----------------------------------------------------------
 
@@ -197,15 +396,17 @@ class HostLoader:
         while not self._stop.wait(interval):
             self._events.put(("tick",))
 
-    # -- the dispatcher -----------------------------------------------------
+    # -- entry points -------------------------------------------------------
 
     def run(self) -> Any:
-        """Bootstrap, run the farm to termination, return the final result."""
-        spec = self.spec
-        deadline = (
-            time.monotonic() + self.job_timeout if self.job_timeout else None
-        )
-
+        """One-shot: bootstrap, dispatch the primary job to completion,
+        return its final result (the classic emit/cluster/collect farm)."""
+        job = self._primary
+        if job is None:
+            raise RuntimeError(
+                "pool-mode HostLoader has no primary job; use serve() + "
+                "submit_job()"
+            )
         with self.timing.phase("host", "load"):
             self._await_registrations()
         # Demand that raced the bootstrap (an early node finishing its LOAD
@@ -213,259 +414,359 @@ class HostLoader:
         for ev in self._early_events:
             self._events.put(ev)
         self._early_events.clear()
+        job.submitted_at = time.monotonic()
+        if self.job_timeout is not None:
+            job.deadline = job.submitted_at + self.job_timeout
+        with self.timing.phase("host", "run"):
+            self._dispatch(until_job=job)
+        self._collect_wire_stats()
+        self.result = job.result
+        return self.result
 
-        S = len(self.stages)
-        details = spec.emit.e_details
-        emit_state = details.initial_state()
-        emit_done = False
-        # Per-stage farm state.  Item ids are per-stage (a stage-s result
-        # forwarded to stage s+1 gets a fresh id in s+1's id space), so
-        # dedup and loss accounting stay local to one hop.
-        next_id = [0] * S
-        pending: list[collections.deque] = [collections.deque()
-                                            for _ in range(S)]
-        inflight: list[dict[int, tuple[str, Any]]] = [{} for _ in range(S)]
-        done_ids: list[set[int]] = [set() for _ in range(S)]
-        r_details = spec.collector.r_details
-        acc = r_details.init()
+    def serve(self, stop: threading.Event) -> None:
+        """Pool mode: bootstrap, then dispatch submitted jobs until ``stop``.
 
-        def input_exhausted(s: int) -> bool:
-            """Stage ``s`` will receive no further input items."""
-            if s == 0:
-                return emit_done
-            return (input_exhausted(s - 1) and not pending[s - 1]
-                    and not inflight[s - 1])
+        Run on a background thread by :class:`ClusterService`; bootstrap
+        failures land in ``serve_error`` (with ``pool_ready`` set so the
+        caller unblocks), and any job still active at shutdown is failed
+        rather than left hanging.
+        """
+        try:
+            with self.timing.phase("host", "load"):
+                self._await_registrations()
+        except BaseException as exc:
+            self.serve_error = exc
+            self.pool_ready.set()
+            return
+        for ev in self._early_events:
+            self._events.put(ev)
+        self._early_events.clear()
+        self.pool_ready.set()
+        try:
+            with self.timing.phase("host", "run"):
+                self._dispatch(stop=stop)
+        except BaseException as exc:  # dispatcher bug or unroutable failure
+            self.serve_error = exc
+        finally:
+            for job in list(self._jobs.values()):
+                if job.active:
+                    self._fail_job(job, self.serve_error
+                                   or RuntimeError("cluster service stopped"))
+            self._collect_wire_stats()
 
-        def stage_done(s: int) -> bool:
-            return input_exhausted(s) and not pending[s] and not inflight[s]
+    # -- the dispatcher -----------------------------------------------------
 
-        def next_item(s: int):
-            nonlocal emit_state, emit_done
-            if pending[s]:
-                return pending[s].popleft()
-            if s == 0 and not emit_done:
-                obj, emit_state = details.create(emit_state)
-                if obj is None:
-                    emit_done = True
-                    return None
-                item = (next_id[0], obj)
-                next_id[0] += 1
-                return item
-            return None  # upstream hasn't produced (or is exhausted)
-
-        def send_batch(rec: NodeRecord, batch: list, s: int) -> bool:
+    def _dispatch(self, until_job: JobState | None = None,
+                  stop: threading.Event | None = None) -> None:
+        interval = self.membership.monitor.interval_s
+        while True:
+            if until_job is not None:
+                if until_job.error is not None:
+                    raise until_job.error
+                if until_job.done.is_set() and self.membership.finished():
+                    break
+            if stop is not None and stop.is_set():
+                return
+            now = time.monotonic()
+            for job in [j for j in self._jobs.values() if j.active]:
+                # Zero-item jobs (and jobs drained by parked-credit answers)
+                # complete here rather than waiting for a RESULT_BATCH.
+                self._maybe_finish(job)
+                if job.active and job.deadline is not None \
+                        and now > job.deadline:
+                    self._fail_job(job, TimeoutError(
+                        f"cluster job exceeded "
+                        f"{job.timeout or self.job_timeout}s "
+                        f"(done={job.items_collected}, "
+                        f"inflight={[len(f) for f in job.inflight]}, "
+                        f"membership:\n{self.membership.describe()})"
+                    ))
             try:
-                rec.conn.send(Frame(
-                    FrameType.WORK_BATCH,
-                    {"items": [{"id": i, "obj": o} for i, o in batch]},
-                    APP_WIRE_CHANNEL,
-                ))
-            except OSError:
-                # Never lose an item on a dead pipe: all of them go back to
-                # the front of the queue; the node itself is reaped shortly.
-                # Encode errors (ValueError: unencodable/oversized payload)
-                # are a *user payload* problem, not a node death — requeueing
-                # would loop forever, so they propagate and fail the job.
-                for item in reversed(batch):
-                    pending[s].appendleft(item)
-                return False
-            for item_id, obj in batch:
-                inflight[s][item_id] = (rec.node_id, obj)
-            self.stats.work_batches += 1
-            self.stats.max_batch = max(self.stats.max_batch, len(batch))
-            return True
-
-        def send_ut(node_id: str) -> None:
-            rec = self.membership.nodes[node_id]
-            try:
-                rec.conn.send(Frame(FrameType.UT, None, APP_WIRE_CHANNEL))
-            except (OSError, ValueError):
+                event = self._events.get(timeout=interval)
+            except queue.Empty:
+                continue
+            kind = event[0]
+            if kind == "frame":
+                _, node_id, frame = event
+                if frame.ftype is FrameType.WORK_REQUEST:
+                    self.stats.work_requests += 1
+                    p = frame.payload or {}
+                    self._answer(node_id, int(p.get("credits", 1)))
+                elif frame.ftype is FrameType.RESULT_BATCH:
+                    p = frame.payload
+                    self._collect_results(
+                        node_id, frame.job_id, p["results"],
+                        int(p.get("credits", 0)),
+                    )
+                elif frame.ftype is FrameType.RESULT:
+                    # Legacy single-result form (one frame per item).
+                    self._collect_results(node_id, frame.job_id,
+                                          [frame.payload], 0)
+                elif frame.ftype is FrameType.HEARTBEAT:
+                    self.membership.beat(node_id)
+                elif frame.ftype is FrameType.UT:
+                    self._node_finished(node_id, frame.payload)
+            elif kind == "loaded":
+                # A LOAD send completing (bootstrap straggler or a per-job
+                # ship): parked credits may be answerable now.
+                self._apply_load_result(*event[1:])
+                self._flush_waiting()
+            elif kind == "tick":
+                self._reap()
+            elif kind == "disconnect":
+                # The socket died; death itself is declared by the
+                # heartbeat threshold (reap), keeping one detection path.
                 pass
+            elif kind == "register":
+                # Late join: a node registering after the run started is
+                # shipped LOAD immediately (the per-registration LOAD
+                # path always supported this — the membership barrier
+                # was what blocked it) and its first WORK_REQUEST is
+                # answered with items or, if the stream already drained,
+                # with UT.  Exactly-once is untouched: result-id dedup
+                # never depended on when a node joined.
+                _, node_id, addr, conn, payload = event
+                if not self.placement.allow_late_join:
+                    conn.close()
+                    continue
+                try:
+                    rec = self.membership.register(
+                        node_id, addr,
+                        cores=int(payload.get("cores", 1)),
+                        pid=int(payload.get("pid", 0)),
+                        conn=conn,
+                    )
+                except ValueError:
+                    conn.close()  # duplicate of a live member
+                    continue
+                self.stats.late_joins += 1
+                if self._primary is not None:
+                    self._send_load(rec, self._primary)
+                else:
+                    self._send_load(rec, None)  # pool config first
+                    for job in self._jobs.values():
+                        if job.active:
+                            self._send_load(rec, job)
+            elif kind == "submit":
+                self._admit(event[1])
+            self._check_liveness()
 
-        def answer(node_id: str, credits: int) -> None:
-            """Answer demand (the onrl server obligation), up to ``credits``
-            + any previously parked credits, in one WORK_BATCH drawn from the
-            node's own stage queue."""
-            rec = self.membership.nodes.get(node_id)
-            if rec is None or not rec.alive:
-                return
-            s = self._stage_of(node_id)
-            want = credits + rec.credits
-            rec.credits = 0
-            if want <= 0:
-                return
+    # -- data plane ---------------------------------------------------------
+
+    def _send_batch(self, rec: NodeRecord, job: JobState, batch: list,
+                    s: int) -> bool:
+        try:
+            rec.conn.send(Frame(
+                FrameType.WORK_BATCH,
+                {"items": [{"id": i, "obj": o, "s": s} for i, o in batch]},
+                APP_WIRE_CHANNEL,
+                job_id=job.job_id,
+            ))
+        except OSError:
+            # Never lose an item on a dead pipe: all of them go back to
+            # the front of the queue; the node itself is reaped shortly.
+            for item in reversed(batch):
+                job.pending[s].appendleft(item)
+            return False
+        except ValueError as exc:
+            # Encode errors (unencodable/oversized payload) are a *user
+            # payload* problem, not a node death — requeueing would loop
+            # forever, so they fail the job (one-shot run() re-raises).
+            self._fail_job(job, exc)
+            return False
+        for item_id, obj in batch:
+            job.inflight[s][item_id] = (rec.node_id, obj)
+        self.stats.work_batches += 1
+        self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        return True
+
+    def _send_ut(self, node_id: str) -> None:
+        rec = self.membership.nodes[node_id]
+        try:
+            rec.conn.send(Frame(FrameType.UT, None, APP_WIRE_CHANNEL))
+        except (OSError, ValueError):
+            pass
+
+    def _answer(self, node_id: str, credits: int) -> None:
+        """Answer demand (the onrl server obligation), up to ``credits`` +
+        any previously parked credits, drawn from the node's eligible
+        (job, stage) queues in scheduling order — one WORK_BATCH per job
+        touched."""
+        rec = self.membership.nodes.get(node_id)
+        if rec is None or not rec.alive:
+            return
+        want = credits + rec.credits
+        rec.credits = 0
+        if want <= 0:
+            return
+        sent = 0
+        for job, s in self._sources(rec):
             batch = []
-            while len(batch) < want:
-                item = next_item(s)
+            while sent + len(batch) < want:
+                item = job.next_item(s)
                 if item is None:
                     break
                 batch.append(item)
-            if batch and not send_batch(rec, batch, s):
-                return  # dead pipe: items requeued, node about to be reaped
-            leftover = want - len(batch)
-            if leftover:
-                if stage_done(s):
-                    send_ut(node_id)
-                else:
-                    rec.credits = leftover  # parked until items (re)appear
+            if not batch:
+                continue
+            if not self._send_batch(rec, job, batch, s):
+                return  # dead pipe (items requeued) or job failed on encode
+            sent += len(batch)
+            if sent >= want:
+                break
+        leftover = want - sent
+        if leftover:
+            primary = self._primary
+            if (primary is not None and primary.error is None
+                    and primary.stage_done(self._stage_of(node_id))):
+                # One-shot: this node's stage drained — it is owed UT.
+                self._send_ut(node_id)
+            else:
+                rec.credits = leftover  # parked until items (re)appear
 
-        def flush_waiting() -> None:
-            for rec in list(self.membership.nodes.values()):
-                if rec.alive and rec.credits > 0:
-                    answer(rec.node_id, 0)
+    def _flush_waiting(self) -> None:
+        for rec in list(self.membership.nodes.values()):
+            if rec.alive and rec.credits > 0:
+                self._answer(rec.node_id, 0)
 
-        def items_collected() -> int:
-            return len(done_ids[S - 1])
+    def _items_collected(self) -> int:
+        if self._primary is not None:
+            return self._primary.items_collected
+        return sum(j.items_collected for j in self._jobs.values())
 
-        def reap(now: float | None = None) -> None:
-            newly_dead = self.membership.reap(now, at_item=items_collected())
-            for rec in newly_dead:
-                self.stats.deaths_detected += 1
-                s = self._stage_of(rec.node_id)
-                lost = [iid for iid, (nid, _) in inflight[s].items()
-                        if nid == rec.node_id]
-                for iid in lost:
-                    _, obj = inflight[s].pop(iid)
-                    pending[s].append((iid, obj))
-                    self.stats.redispatched += 1
-            if newly_dead:
-                flush_waiting()
-
-        def collect_results(node_id: str, results: list, credits: int) -> None:
-            nonlocal acc
-            self.stats.result_batches += 1
-            s = self._stage_of(node_id)
-            for p in results:
-                if "error" in p:
-                    raise WorkFunctionError(
-                        f"work function raised on {node_id} for item "
-                        f"{p['id']}: {p['error']}\n"
-                        f"{p.get('traceback', '')}"
-                    )
-                # Always clear inflight — a redispatched item can complete
-                # twice (zombie result + survivor result) and both entries
-                # must go or termination stalls.
-                inflight[s].pop(p["id"], None)
-                if p["id"] in done_ids[s]:
-                    self.stats.duplicates_dropped += 1
-                else:
-                    done_ids[s].add(p["id"])
-                    if s + 1 < S:
-                        # The hop rendezvous: this result *is* stage s+1's
-                        # next work item (dedup above makes it exactly once).
-                        pending[s + 1].append((next_id[s + 1], p["value"]))
-                        next_id[s + 1] += 1
-                        self.stats.forwarded += 1
-                    else:
-                        acc = r_details.collect(acc, p["value"])
-                        self.stats.items_total += 1
-                    rec = self.membership.nodes[node_id]
-                    rec.items_done += 1
-                    self.timing.count_item(node_id)
-            if credits:
-                answer(node_id, credits)
-            # Forwarded items may satisfy parked downstream demand, and a
-            # stage draining may owe its nodes UT: both are answered here.
-            flush_waiting()
-
-        def check_liveness() -> None:
-            """A stage with obligations left but no live nodes can never
-            finish — fail fast instead of idling to job_timeout.  LAUNCHING
-            members keep a stage eligible: a degraded start's straggler (or
-            a respawned launch) may still register and carry the stage."""
-            for s in range(S):
-                if stage_done(s):
+    def _reap(self, now: float | None = None) -> None:
+        newly_dead = self.membership.reap(now, at_item=self._items_collected())
+        for rec in newly_dead:
+            self.stats.deaths_detected += 1
+            for job in self._jobs.values():
+                if not job.active:
                     continue
-                members = [rec for rec in self.membership.nodes.values()
-                           if self._stage_of(rec.node_id) == s]
+                for s in range(job.S):
+                    lost = [iid for iid, (nid, _) in job.inflight[s].items()
+                            if nid == rec.node_id]
+                    for iid in lost:
+                        _, obj = job.inflight[s].pop(iid)
+                        job.pending[s].append((iid, obj))
+                        self.stats.redispatched += 1
+        if newly_dead:
+            self._flush_waiting()
+
+    def _collect_results(self, node_id: str, job_id: int, results: list,
+                         credits: int) -> None:
+        self.stats.result_batches += 1
+        job = self._jobs.get(job_id)
+        if job is None or job.error is not None:
+            # A zombie batch for a torn-down/failed job: the results are
+            # moot but the credits still replenish the node's window.
+            if credits:
+                self._answer(node_id, credits)
+            return
+        for p in results:
+            s = int(p.get("s", 0))
+            if "error" in p:
+                self._fail_job(job, WorkFunctionError(
+                    f"work function raised on {node_id} for item "
+                    f"{p['id']}: {p['error']}\n"
+                    f"{p.get('traceback', '')}"
+                ))
+                break
+            # Always clear inflight — a redispatched item can complete
+            # twice (zombie result + survivor result) and both entries
+            # must go or termination stalls.
+            job.inflight[s].pop(p["id"], None)
+            if p["id"] in job.done_ids[s]:
+                self.stats.duplicates_dropped += 1
+            else:
+                job.done_ids[s].add(p["id"])
+                if s + 1 < job.S:
+                    # The hop rendezvous: this result *is* stage s+1's
+                    # next work item (dedup above makes it exactly once).
+                    job.pending[s + 1].append((job.next_id[s + 1],
+                                               p["value"]))
+                    job.next_id[s + 1] += 1
+                    self.stats.forwarded += 1
+                else:
+                    job.acc = job.r_details.collect(job.acc, p["value"])
+                    job.items_collected += 1
+                    if job.first_result_at is None:
+                        job.first_result_at = time.monotonic()
+                    self.stats.items_total += 1
+                rec = self.membership.nodes[node_id]
+                rec.items_done += 1
+                self.timing.count_item(node_id)
+        if credits:
+            self._answer(node_id, credits)
+        # Forwarded items may satisfy parked downstream demand, and a
+        # stage draining may owe its nodes UT: both are answered here.
+        self._flush_waiting()
+        self._maybe_finish(job)
+
+    # -- job lifecycle ------------------------------------------------------
+
+    def _maybe_finish(self, job: JobState) -> None:
+        if not job.active or job.error is not None:
+            return
+        if not job.stage_done(job.S - 1):
+            return
+        job.result = job.r_details.finalise(job.acc)
+        job.done.set()
+        if not job.pinned:
+            self._send_job_close(job)
+
+    def _fail_job(self, job: JobState, exc: BaseException) -> None:
+        if job.done.is_set():
+            return
+        job.error = exc
+        job.done.set()
+        if not job.pinned:
+            self._send_job_close(job)
+
+    def _send_job_close(self, job: JobState) -> None:
+        """Per-job teardown: nodes drop the job's bindings (warm code cache
+        entries survive) and their credits stay pooled for the next job."""
+        for rec in self.membership.nodes.values():
+            if not rec.alive or job.job_id not in rec.jobs_loaded:
+                continue
+            rec.jobs_loaded.discard(job.job_id)
+            try:
+                rec.conn.send(Frame(FrameType.JOB_CLOSE,
+                                    {"job_id": job.job_id},
+                                    APP_WIRE_CHANNEL, job_id=job.job_id))
+            except (OSError, ValueError):
+                pass
+
+    def _check_liveness(self) -> None:
+        """A job with obligations left but no eligible live nodes can never
+        finish — fail it fast instead of idling to its deadline.  LAUNCHING
+        members keep a stage eligible: a degraded start's straggler (or a
+        respawned launch) may still register and carry the stage."""
+        for job in [j for j in self._jobs.values() if j.active]:
+            failed = False
+            for s in range(job.S):
+                if job.stage_done(s):
+                    continue
+                if job.pinned:
+                    members = [rec for rec in self.membership.nodes.values()
+                               if self._stage_of(rec.node_id) == s]
+                else:
+                    members = list(self.membership.nodes.values())
                 if any(rec.alive or rec.state == LAUNCHING
                        for rec in members):
                     continue
-                raise RuntimeError(
-                    f"all node-loaders of stage {self.stages[s].name!r} "
-                    f"died with work outstanding ({len(inflight[s])} "
-                    f"in flight, {len(pending[s])} queued; no launch "
+                self._fail_job(job, RuntimeError(
+                    f"all node-loaders of stage {job.spec.stages[s].name!r} "
+                    f"died with work outstanding ({len(job.inflight[s])} "
+                    f"in flight, {len(job.pending[s])} queued; no launch "
                     "pending)"
-                )
-
-        with self.timing.phase("host", "run"):
-            while True:
-                if stage_done(S - 1) and self.membership.finished():
-                    break
-                if deadline is not None and time.monotonic() > deadline:
-                    raise TimeoutError(
-                        f"cluster job exceeded {self.job_timeout}s "
-                        f"(done={items_collected()}, "
-                        f"inflight={[len(f) for f in inflight]}, "
-                        f"membership:\n{self.membership.describe()})"
-                    )
-                try:
-                    event = self._events.get(
-                        timeout=self.membership.monitor.interval_s
-                    )
-                except queue.Empty:
-                    continue
-                kind = event[0]
-                if kind == "frame":
-                    _, node_id, frame = event
-                    if frame.ftype is FrameType.WORK_REQUEST:
-                        self.stats.work_requests += 1
-                        p = frame.payload or {}
-                        answer(node_id, int(p.get("credits", 1)))
-                    elif frame.ftype is FrameType.RESULT_BATCH:
-                        p = frame.payload
-                        collect_results(
-                            node_id, p["results"], int(p.get("credits", 0))
-                        )
-                    elif frame.ftype is FrameType.RESULT:
-                        # Legacy single-result form (one frame per item).
-                        collect_results(node_id, [frame.payload], 0)
-                    elif frame.ftype is FrameType.HEARTBEAT:
-                        self.membership.beat(node_id)
-                    elif frame.ftype is FrameType.UT:
-                        self._node_finished(node_id, frame.payload)
-                elif kind == "loaded":
-                    # A straggler's LOAD send completing after bootstrap.
-                    self._apply_load_result(event[1], event[2])
-                elif kind == "tick":
-                    reap()
-                elif kind == "disconnect":
-                    # The socket died; death itself is declared by the
-                    # heartbeat threshold (reap), keeping one detection path.
-                    pass
-                elif kind == "register":
-                    # Late join: a node registering after the run started is
-                    # shipped LOAD immediately (the per-registration LOAD
-                    # path always supported this — the membership barrier
-                    # was what blocked it) and its first WORK_REQUEST is
-                    # answered with items or, if the stream already drained,
-                    # with UT.  Exactly-once is untouched: result-id dedup
-                    # never depended on when a node joined.
-                    _, node_id, addr, conn, payload = event
-                    if not self.placement.allow_late_join:
-                        conn.close()
-                        continue
-                    try:
-                        rec = self.membership.register(
-                            node_id, addr,
-                            cores=int(payload.get("cores", 1)),
-                            pid=int(payload.get("pid", 0)),
-                            conn=conn,
-                        )
-                    except ValueError:
-                        conn.close()  # duplicate of a live member
-                        continue
-                    self.stats.late_joins += 1
-                    self._send_load(rec)
-                check_liveness()
-
-        self._collect_wire_stats()
-        self.result = r_details.finalise(acc)
-        return self.result
+                ))
+                failed = True
+                break
+            if failed:
+                continue
 
     def _stage_of(self, node_id: str) -> int:
-        """Stage index of a node (respawn replacements via their base id;
-        unknown elastic joiners default to stage 0)."""
+        """Stage index of a one-shot node (respawn replacements via their
+        base id; unknown elastic joiners default to stage 0)."""
         s = self._stage_by_node.get(node_id)
         if s is not None:
             return s
@@ -493,7 +794,7 @@ class HostLoader:
           registration wins, extra capacity is never turned away.
         """
         pol = self.placement
-        expected = self.spec.total_nodes
+        expected = self.total_nodes
         min_nodes = expected if pol.min_nodes is None else pol.min_nodes
         respawn_after = pol.respawn_after
         if respawn_after is None:
@@ -541,7 +842,7 @@ class HostLoader:
             except queue.Empty:
                 continue
             if event[0] == "loaded":
-                self._apply_load_result(event[1], event[2])
+                self._apply_load_result(*event[1:])
                 continue
             if event[0] == "frame":
                 # Early heartbeats (nodes beat from REGISTER onwards) must
@@ -554,6 +855,11 @@ class HostLoader:
                     self.membership.beat(node_id)
                 else:
                     self._early_events.append(event)
+                continue
+            if event[0] == "submit":
+                # A service job submitted before the pool finished booting:
+                # admission happens in the dispatcher, after the barrier.
+                self._early_events.append(event)
                 continue
             if event[0] != "register":
                 continue  # pre-bootstrap noise
@@ -570,7 +876,7 @@ class HostLoader:
                 continue
             # Overlapped load: ship code the moment a node shows up, so its
             # deserialization/imports run while stragglers still register.
-            self._send_load(rec)
+            self._send_load(rec, self._primary)
 
     def _respawn(self, rec: NodeRecord) -> bool:
         """Retire a silent launch and start a replacement elsewhere."""
@@ -591,52 +897,100 @@ class HostLoader:
         self.stats.respawns += 1
         return True
 
-    def _send_load(self, rec: NodeRecord) -> None:
-        """Ship the deployment to one node from a dedicated sender thread.
+    # -- code shipping ------------------------------------------------------
+
+    def _load_entries(self, rec: NodeRecord, job: JobState) -> list[dict]:
+        """Per-stage LOAD entries for one node, consulting (and updating)
+        the host's mirror of its code-cache LRU: a digest the node still
+        holds ships ``function=None`` (the warm-resubmit fast path)."""
+        if job.pinned:
+            s_list = [self._stage_of(rec.node_id)]
+        else:
+            s_list = list(range(job.S))
+        entries = []
+        for s in s_list:
+            digest, blob = job.stage_code[s]
+            if digest in rec.code_digests:
+                rec.code_digests.move_to_end(digest)
+                fn_blob = None
+                job.code_cached += 1
+            else:
+                rec.code_digests[digest] = None
+                while len(rec.code_digests) > CODE_CACHE_SLOTS:
+                    rec.code_digests.popitem(last=False)
+                fn_blob = blob
+                job.code_shipped += 1
+            entries.append({"s": s, "stage": job.spec.stages[s].name,
+                            "digest": digest, "function": fn_blob})
+        return entries
+
+    def _send_load(self, rec: NodeRecord, job: JobState | None) -> None:
+        """Ship a deployment (pool config and/or one job's stages) to one
+        node from a dedicated sender thread.
 
         A node booting heavy deps drains its socket only once its preloader
         finishes; a large LOAD (MBs of artifacts) would therefore block a
         synchronous send past the kernel buffer — and block the dispatcher
         with it, re-serializing the very bootstrap the overlap parallelizes.
-        The sender thread reports back through the event queue
-        (``("loaded", node_id, ok)``) so membership stays single-writer.
+        The payload is built *here* (dispatcher thread — it touches job and
+        LRU state); the sender thread only sends, reporting back through
+        the event queue (``("loaded", node_id, ok, job_id)``) so membership
+        stays single-writer.
         """
-        stage = self.stages[self._stage_of(rec.node_id)]
+        if job is not None:
+            entries = self._load_entries(rec, job)
+        else:
+            entries = []
+        # Per-stage data-plane knobs resolve host-side: a pinned node's
+        # single stage may override the cluster-wide prefetch/flush values.
+        prefetch, flush_interval = self.prefetch, self.flush_interval
+        if job is not None and job.pinned:
+            st = job.spec.stages[self._stage_of(rec.node_id)]
+            workers = st.workers_per_node
+            if st.prefetch is not None:
+                prefetch = st.prefetch
+            if st.flush_ms is not None:
+                flush_interval = st.flush_ms / 1000.0
+        else:
+            workers = self.pool_workers
+        job_id = 0 if job is None else job.job_id
         payload = {
             "node_id": rec.node_id,
-            "workers": stage.workers_per_node,
-            "function": stage.function,
-            "stage": stage.name,
+            "workers": workers,
             "heartbeat_interval": self.membership.monitor.interval_s,
             "slowdown": float(self.slowdown.get(rec.node_id, 0.0)),
             "artifacts": self.artifacts,
-            "prefetch": self.prefetch,
+            "prefetch": prefetch,
             "flush_items": self.flush_items,
-            "flush_interval": self.flush_interval,
+            "flush_interval": flush_interval,
+            "stages": entries,
         }
 
         def sender() -> None:
             try:
-                rec.conn.send(Frame(FrameType.LOAD, payload, LOAD_WIRE_CHANNEL))
+                rec.conn.send(Frame(FrameType.LOAD, payload,
+                                    LOAD_WIRE_CHANNEL, job_id=job_id))
             except Exception:
                 # Dead pipe or an unserializable deployment: either way the
                 # node can never load — report it so it is marked dead
                 # (unloadable everywhere -> "all node-loaders died") rather
                 # than leaving the job to idle until job_timeout.
-                self._events.put(("loaded", rec.node_id, False))
+                self._events.put(("loaded", rec.node_id, False, job_id))
                 return
-            self._events.put(("loaded", rec.node_id, True))
+            self._events.put(("loaded", rec.node_id, True, job_id))
 
         t = threading.Thread(target=sender, name=f"hnl-load-{rec.node_id}",
                              daemon=True)
         t.start()
         self._threads.append(t)
 
-    def _apply_load_result(self, node_id: str, ok: bool) -> None:
+    def _apply_load_result(self, node_id: str, ok: bool,
+                           job_id: int = 0) -> None:
         rec = self.membership.nodes.get(node_id)
         if ok:
             if rec is not None and rec.alive:  # never resurrect a reaped node
                 self.membership.mark_loaded(node_id)
+                rec.jobs_loaded.add(job_id)
             return
         # Died between REGISTER and LOAD: a bootstrap-time node loss,
         # handled like any other — survivors run the job.
@@ -670,6 +1024,15 @@ class HostLoader:
         self.timing.add_wire(**agg)
 
     # -- teardown -----------------------------------------------------------
+
+    def shutdown_nodes(self) -> None:
+        """Send UT to every live node (pool teardown — they exit cleanly)."""
+        for rec in self.membership.nodes.values():
+            if rec.alive and rec.conn is not None:
+                try:
+                    rec.conn.send(Frame(FrameType.UT, None, APP_WIRE_CHANNEL))
+                except (OSError, ValueError):
+                    pass
 
     def close(self) -> None:
         self._stop.set()

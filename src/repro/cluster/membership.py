@@ -16,6 +16,7 @@ its dispatcher loop.
 
 from __future__ import annotations
 
+import collections
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -56,6 +57,16 @@ class NodeRecord:
     # pipelining): credits the node sent that are parked until new items
     # appear (re-dispatch) or the job terminates (answered with UT).
     credits: int = 0
+    # Multi-job service state.  ``jobs_loaded`` holds the job ids whose LOAD
+    # this node has acked — the host only dispatches job-J work to a node
+    # once J is in here (no work-before-code races).  ``code_digests`` is
+    # the host-side mirror of the node's warm code-cache LRU (digest ->
+    # None, insertion-ordered, same capacity and touch order as the node's),
+    # so the host knows which stage functions it can skip re-shipping.
+    jobs_loaded: set = field(default_factory=set)
+    code_digests: collections.OrderedDict = field(
+        default_factory=collections.OrderedDict
+    )
     timing: dict[str, Any] = field(default_factory=dict)
     conn: Any = None  # FrameConnection; opaque to this module
 

@@ -14,22 +14,36 @@ Lifecycle (timed per requirement 7, split three ways):
    workstation, accounted separately from code distribution.  The dial
    retries with exponential backoff inside ``--connect-timeout``: a
    remotely launched node may come up before the host is listening;
-2. *load*: receive LOAD — the deployment payload (work function shipped by
-   value over the code-loading channel; optional AOT-serialized executables
-   land in :data:`ARTIFACTS`).  Deserialization is deferred until the
-   preloader finishes so shipped-code imports hit a warm module cache
-   instead of serializing on the import lock inside the load window;
+2. *load*: receive LOAD frames — the deployment payload (work functions
+   shipped by value over the code-loading channel; optional AOT-serialized
+   executables land in :data:`ARTIFACTS`).  The first LOAD configures the
+   node (worker count, credit window, flush cadence) and starts the
+   workers; every LOAD binds its job's stage functions.  Deserialization is
+   deferred until the preloader finishes so shipped-code imports hit a warm
+   module cache instead of serializing on the import lock inside the load
+   window;
 3. *run*: the node-local Figure-2 fragment, pipelined.  The nrfa client
    keeps a *window* of ``workers + prefetch`` items resident: one initial
-   WORK_REQUEST carries ``credits=window``, the host answers with a
-   WORK_BATCH, and every RESULT_BATCH the flusher sends piggybacks
+   WORK_REQUEST carries ``credits=window``, the host answers with
+   WORK_BATCH frames, and every RESULT_BATCH the flusher sends piggybacks
    ``credits=len(results)`` — each completed item frees a window slot, so
    demand travels with delivery and workers never idle on a round-trip.
-   Results coalesce in a small buffer flushed on a threshold or a few-ms
-   interval instead of one frame + one syscall per item;
+   Results coalesce in small per-job buffers flushed on a threshold or a
+   few-ms interval instead of one frame + one syscall per item;
 4. on UT: flood workers with UT, join them, return
    (boot_ms, load_ms, run_ms, items) to the host in a final UT frame,
    exit 0.
+
+Warm multi-job service (wire v2): the node is long-lived.  Work items
+arrive tagged with the frame-header ``job_id`` and their stage index
+``s``; the worker dispatches through a ``(job_id, s) -> function`` table
+so two jobs interleave on one worker pool.  Stage functions are addressed
+by digest and kept in a bounded LRU (:data:`CODE_CACHE_SLOTS` entries):
+when the host re-ships a stage this node already holds, the LOAD entry
+carries ``function=None`` and the node rebinds from cache — a warm
+resubmit pays neither boot nor code transfer.  JOB_CLOSE drops one job's
+bindings (the cache survives — that *is* the warmth); UT still terminates
+the node itself.
 
 This module must import without jax — a node-loader on a fresh workstation
 is a bare bootstrap; the shipped code pulls in its own dependencies when
@@ -39,6 +53,7 @@ deserialized (or earlier, via ``--preload``).
 from __future__ import annotations
 
 import argparse
+import collections
 import importlib
 import os
 import queue
@@ -46,17 +61,18 @@ import socket
 import threading
 import time
 import traceback
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
-from repro.cluster.netchannels import ChannelClosed, ChannelMux
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
+    CODE_CACHE_SLOTS,
     DEFAULT_HEARTBEAT_S,
     LOAD_WIRE_CHANNEL,
     UT,
     Frame,
     FrameConnection,
     FrameType,
+    loads_code,
 )
 
 # AOT-serialized executables shipped in the LOAD payload, keyed by name.
@@ -101,8 +117,14 @@ def run_node(
     node_id: str | None = None,
     connect_timeout: float = 30.0,
     preload: Sequence[str] = (),
+    on_conn: Callable[[FrameConnection], None] | None = None,
 ) -> dict[str, Any]:
-    """Run one Node-Loader to completion; returns its timing record."""
+    """Run one Node-Loader to completion; returns its timing record.
+
+    ``on_conn`` (test hook) is called with the live :class:`FrameConnection`
+    right after the dial succeeds, so an in-process harness can sever the
+    socket to simulate this node dying mid-run.
+    """
     node_id = node_id or f"{socket.gethostname()}-{os.getpid()}"
     t_boot0 = time.perf_counter()
 
@@ -123,14 +145,8 @@ def run_node(
     sock = connect_with_retry(host, port, timeout=connect_timeout)
     sock.settimeout(None)
     conn = FrameConnection(sock)
-    mux = ChannelMux(conn)
-    # Inboxes exist before we announce ourselves (§4 ordering: input ends
-    # before output ends).  The reader *thread* starts only after the
-    # preloader joins — decoding LOAD pulls in the shipped code's imports,
-    # and those must not contend with the preloader inside the load window;
-    # meanwhile inbound frames simply wait in the kernel socket buffer.
-    load_ch = mux.open(LOAD_WIRE_CHANNEL, FrameType.LOAD, maxsize=4)
-    app_ch = mux.open(APP_WIRE_CHANNEL, FrameType.WORK_BATCH, maxsize=64)
+    if on_conn is not None:
+        on_conn(conn)
 
     conn.send(Frame(
         FrameType.REGISTER,
@@ -158,90 +174,80 @@ def run_node(
                                    daemon=True)
     beat_thread.start()
 
+    # LOAD decoding (and the shipped code's imports with it) must not
+    # contend with the preloader inside the load window; inbound frames
+    # simply wait in the kernel socket buffer until it joins.
     preload_thread.join()
     boot_ms = (time.perf_counter() - t_boot0) * 1e3
-    t_load0 = time.perf_counter()
-    mux.start()
+    load_ms = 0.0
+    items_done = 0
+    run_ms = 0.0
 
-    try:
-        plan = load_ch.get(timeout=connect_timeout)
-    except queue.Empty:
-        stop_beat.set()
-        conn.close()
-        raise ConnectionError(
-            f"no LOAD received from the host within {connect_timeout}s "
-            "(are all expected node-loaders up?)"
-        ) from None
-    if plan is UT:  # host aborted during bootstrap
+    def early_record() -> dict[str, Any]:
+        # Host aborted (UT) or vanished during bootstrap: nothing ran.
         stop_beat.set()
         conn.close()
         return {"node_id": node_id, "boot_ms": round(boot_ms, 3),
                 "load_ms": 0.0, "run_ms": 0.0, "items": 0}
-    fn = plan["function"]
-    workers = int(plan["workers"])
-    slowdown = float(plan.get("slowdown", 0.0))
-    beat_interval[0] = float(
-        plan.get("heartbeat_interval", DEFAULT_HEARTBEAT_S)
-    )
-    prefetch = plan.get("prefetch")
-    # None = one extra per worker; 0 is honoured (strict one-item-per-worker
-    # window, the pure demand-driven pre-pipelining behaviour).
-    prefetch = workers if prefetch is None else max(0, int(prefetch))
-    window = workers + prefetch
-    flush_items = max(1, int(plan.get("flush_items", 8)))
-    flush_interval = float(plan.get("flush_interval", 0.005))
-    ARTIFACTS.clear()
-    ARTIFACTS.update(plan.get("artifacts") or {})
-    load_ms = (time.perf_counter() - t_load0) * 1e3
 
-    # -- the node-local Figure-2 fragment, pipelined -------------------------
-    # Buffering is bounded by the credit window, not by queue capacity: the
-    # host never holds more than `window` items against this node.
+    # -- multi-job state ----------------------------------------------------
+    # fns: the worker dispatch table; code_cache: the digest-keyed warm LRU
+    # the host mirrors (same capacity, same touch order — frames arrive in
+    # send order on one TCP stream, so both sides evict identically).
+    fns: dict[tuple[int, int], Callable[[Any], Any]] = {}
+    code_cache: collections.OrderedDict = collections.OrderedDict()
+    configured = False
+    workers = 1
+    slowdown = 0.0
+    window = 2
+    flush_items = 8
+    flush_interval = 0.005
+
     work_q: queue.Queue = queue.Queue()
-    items_done = 0
     items_lock = threading.Lock()
-
     out_lock = threading.Lock()
-    out_buf: list[dict] = []
+    out_bufs: dict[int, list[dict]] = {}  # job_id -> pending results
     flush_now = threading.Event()
     stop_flush = threading.Event()
 
-    def complete(result: dict, urgent: bool = False) -> None:
+    def complete(job_id: int, result: dict, urgent: bool = False) -> None:
         with out_lock:
-            out_buf.append(result)
-            n = len(out_buf)
+            out_bufs.setdefault(job_id, []).append(result)
+            n = sum(len(b) for b in out_bufs.values())
         if urgent or n >= flush_items:
             flush_now.set()
 
     def flush() -> None:
         with out_lock:
-            if not out_buf:
-                return
-            batch, out_buf[:] = list(out_buf), []
-        payload = {"node_id": node_id, "results": batch,
-                   # Each finished item frees one window slot: demand
-                   # piggybacks on delivery (no separate request frame).
-                   "credits": len(batch)}
-        try:
-            conn.send(Frame(FrameType.RESULT_BATCH, payload, APP_WIRE_CHANNEL))
-        except OSError:
-            pass  # host gone: the nrfa loop shuts the node down
-        except Exception as exc:
-            # A result refused to serialize: report instead of stalling the
-            # job with a silently dead flusher (the host fails fast).
+            batches = [(jid, buf) for jid, buf in out_bufs.items() if buf]
+            out_bufs.clear()
+        for jid, batch in batches:
+            payload = {"node_id": node_id, "results": batch,
+                       # Each finished item frees one window slot: demand
+                       # piggybacks on delivery (no separate request frame).
+                       "credits": len(batch)}
             try:
-                conn.send(Frame(
-                    FrameType.RESULT_BATCH,
-                    {"node_id": node_id, "credits": len(batch),
-                     "results": [{
-                         "id": batch[0]["id"],
-                         "error": f"{type(exc).__name__}: {exc}",
-                         "traceback": traceback.format_exc(),
-                     }]},
-                    APP_WIRE_CHANNEL,
-                ))
+                conn.send(Frame(FrameType.RESULT_BATCH, payload,
+                                APP_WIRE_CHANNEL, job_id=jid))
             except OSError:
-                pass
+                pass  # host gone: the nrfa loop shuts the node down
+            except Exception as exc:
+                # A result refused to serialize: report instead of stalling
+                # the job with a silently dead flusher (the host fails fast).
+                try:
+                    conn.send(Frame(
+                        FrameType.RESULT_BATCH,
+                        {"node_id": node_id, "credits": len(batch),
+                         "results": [{
+                             "id": batch[0]["id"],
+                             "s": batch[0].get("s", 0),
+                             "error": f"{type(exc).__name__}: {exc}",
+                             "traceback": traceback.format_exc(),
+                         }]},
+                        APP_WIRE_CHANNEL, job_id=jid,
+                    ))
+                except OSError:
+                    pass
 
     def flusher() -> None:
         while not stop_flush.is_set():
@@ -253,19 +259,34 @@ def run_node(
     def worker() -> None:
         nonlocal items_done
         while True:
-            item = work_q.get()
-            if item is UT:
+            got = work_q.get()
+            if got is UT:
                 return
+            job_id, item = got
+            s = int(item.get("s", 0))
+            fn = fns.get((job_id, s))
+            if fn is None:
+                # JOB_CLOSE raced ahead of in-flight items: the job is
+                # already finished/failed host-side, so the result is moot —
+                # but the credit is not (a dropped item would shrink the
+                # window forever).  Report an error result; the host ignores
+                # results of closed jobs and banks the piggybacked credit.
+                complete(job_id, {"id": item["id"], "s": s,
+                                  "error": "stage binding dropped "
+                                           "(job closed)"},
+                         urgent=True)
+                continue
             try:
                 value = fn(item["obj"])
                 if slowdown > 0.0:
                     time.sleep(slowdown)  # injected straggler (§6.1 testing)
-                complete({"id": item["id"], "value": value})
+                complete(job_id, {"id": item["id"], "s": s, "value": value})
             except BaseException as exc:
                 # Report instead of dying silently: a dead worker thread
                 # would stall the node (heartbeats keep flowing, so the
                 # host would never re-dispatch).  The host fails the job.
-                complete({"id": item["id"],
+                complete(job_id,
+                         {"id": item["id"], "s": s,
                           "error": f"{type(exc).__name__}: {exc}",
                           "traceback": traceback.format_exc()},
                          urgent=True)
@@ -273,42 +294,121 @@ def run_node(
             with items_lock:
                 items_done += 1
 
-    worker_threads = [
-        threading.Thread(target=worker, name=f"nl-worker{i}", daemon=True)
-        for i in range(workers)
-    ]
-    for t in worker_threads:
-        t.start()
+    worker_threads: list[threading.Thread] = []
     flush_thread = threading.Thread(target=flusher, name="nl-flusher",
                                     daemon=True)
-    flush_thread.start()
-
     t_run0 = time.perf_counter()
+
+    def bind_stages(job_id: int, plan: dict) -> None:
+        for entry in plan.get("stages", ()):
+            digest = entry["digest"]
+            blob = entry["function"]
+            if blob is not None:
+                fn = loads_code(blob)
+                code_cache[digest] = fn
+                while len(code_cache) > CODE_CACHE_SLOTS:
+                    code_cache.popitem(last=False)
+            else:
+                # The host's LRU mirror says we still hold it — if the two
+                # ever diverged this KeyError kills the node, the host reaps
+                # it and redispatches: degraded, not wrong.
+                fn = code_cache[digest]
+                code_cache.move_to_end(digest)
+            fns[(job_id, int(entry["s"]))] = fn
+
+    def apply_load(job_id: int, plan: dict) -> None:
+        nonlocal configured, workers, slowdown, window
+        nonlocal flush_items, flush_interval, t_run0
+        if not configured:
+            configured = True
+            workers = int(plan["workers"])
+            slowdown = float(plan.get("slowdown", 0.0))
+            beat_interval[0] = float(
+                plan.get("heartbeat_interval", DEFAULT_HEARTBEAT_S)
+            )
+            prefetch = plan.get("prefetch")
+            # None = one extra per worker; 0 is honoured (strict
+            # one-item-per-worker window, the pure demand-driven
+            # pre-pipelining behaviour).
+            prefetch = workers if prefetch is None else max(0, int(prefetch))
+            window = workers + prefetch
+            flush_items = max(1, int(plan.get("flush_items", 8)))
+            flush_interval = float(plan.get("flush_interval", 0.005))
+            ARTIFACTS.clear()
+            ARTIFACTS.update(plan.get("artifacts") or {})
+            bind_stages(job_id, plan)
+            for i in range(workers):
+                t = threading.Thread(target=worker, name=f"nl-worker{i}",
+                                     daemon=True)
+                t.start()
+                worker_threads.append(t)
+            flush_thread.start()
+            t_run0 = time.perf_counter()
+            # The windowed nrfa client: one up-front demand for the whole
+            # window, then WORK_BATCH frames fill it and RESULT_BATCH
+            # credits (sent by the flusher) keep it full.  Sent *after* the
+            # stages bound above, so work can never outrun code.
+            conn.send(Frame(
+                FrameType.WORK_REQUEST,
+                {"node_id": node_id, "credits": window},
+                APP_WIRE_CHANNEL,
+            ))
+        else:
+            bind_stages(job_id, plan)
+
+    # First frame: the host answers REGISTER with LOAD (or UT on abort).
+    # Bound the wait — a host that never loads us is indistinguishable from
+    # a wedged bootstrap, and the paper's NL is supposed to fail loudly.
+    sock.settimeout(connect_timeout)
     try:
-        # The windowed nrfa client: one up-front demand for the whole
-        # window, then WORK_BATCH frames fill it and RESULT_BATCH credits
-        # (sent by the flusher) keep it full.
-        conn.send(Frame(
-            FrameType.WORK_REQUEST,
-            {"node_id": node_id, "credits": window},
-            APP_WIRE_CHANNEL,
-        ))
+        first = conn.recv()
+    except socket.timeout:
+        stop_beat.set()
+        conn.close()
+        raise ConnectionError(
+            f"no LOAD received from the host within {connect_timeout}s "
+            "(are all expected node-loaders up?)"
+        ) from None
+    except (ConnectionError, OSError, ValueError):
+        return early_record()
+    sock.settimeout(None)
+
+    terminated_by_host = False
+    frame: Frame | None = first
+    try:
         while True:
-            msg = app_ch.get()
-            if msg is UT:
-                for _ in range(workers):
-                    work_q.put(UT)
+            if frame is None:
+                frame = conn.recv()
+            if frame.ftype is FrameType.UT:
+                if not configured:
+                    return early_record()
+                terminated_by_host = True
                 break
-            items = (msg["items"]
-                     if isinstance(msg, dict) and "items" in msg
-                     else [msg])  # legacy single-WORK frame
-            for item in items:
-                work_q.put(item)
-    except (ChannelClosed, OSError):
-        # Host vanished (mid-recv or mid-request-send): there is nobody to
-        # deliver to; shut down quietly.
-        for _ in range(workers):
-            work_q.put(UT)
+            if frame.ftype is FrameType.LOAD:
+                t0 = time.perf_counter()
+                apply_load(frame.job_id, frame.payload)
+                load_ms += (time.perf_counter() - t0) * 1e3
+            elif frame.ftype is FrameType.WORK_BATCH:
+                for item in frame.payload["items"]:
+                    work_q.put((frame.job_id, item))
+            elif frame.ftype is FrameType.WORK:  # legacy single form
+                work_q.put((frame.job_id, frame.payload))
+            elif frame.ftype is FrameType.JOB_CLOSE:
+                # The job is done (or failed) host-side: drop its dispatch
+                # bindings.  The code cache is untouched — keeping it hot
+                # is what makes the next submit of the same pipeline warm.
+                jid = frame.job_id
+                for key in [k for k in fns if k[0] == jid]:
+                    del fns[key]
+            frame = None
+    except (ConnectionError, OSError, ValueError):
+        # Host vanished (mid-recv): there is nobody to deliver to; shut
+        # down quietly.
+        if not configured:
+            return early_record()
+
+    for _ in range(workers):
+        work_q.put(UT)
     for t in worker_threads:
         t.join()
     stop_flush.set()
@@ -324,10 +424,11 @@ def run_node(
         "run_ms": round(run_ms, 3),
         "items": items_done,
     }
-    try:
-        conn.send(Frame(FrameType.UT, record, LOAD_WIRE_CHANNEL))
-    except OSError:
-        pass
+    if terminated_by_host:
+        try:
+            conn.send(Frame(FrameType.UT, record, LOAD_WIRE_CHANNEL))
+        except OSError:
+            pass
     conn.close()
     return record
 

@@ -2,10 +2,10 @@
 
 Every message is one *frame*::
 
-    +-------+---------+-------+-------+---------+----------+-----------+
-    | magic | version | ftype | codec | channel | length   | payload   |
-    | 4B    | 1B      | 1B    | 1B    | 1B      | 4B (!I)  | length B  |
-    +-------+---------+-------+-------+---------+----------+-----------+
+    +-------+---------+-------+-------+---------+---------+----------+---------+
+    | magic | version | ftype | codec | channel | job_id  | length   | payload |
+    | 4B    | 1B      | 1B    | 1B    | 1B      | 4B (!I) | 4B (!I)  | len B   |
+    +-------+---------+-------+-------+---------+---------+----------+---------+
 
 ``ftype`` is the protocol event — the same alphabet as the CSP model in
 ``core.protocol`` plus the bootstrap events of paper §4 (Figure 1):
@@ -16,6 +16,13 @@ Terminator made visible on the wire.  WORK/RESULT are the original
 one-object-per-frame events; the pipelined data plane coalesces them into
 WORK_BATCH/RESULT_BATCH (see ARCHITECTURE.md "Data plane") but both sides
 still accept the single-object forms.
+
+``job_id`` (wire version 2) is the multiplexing key of the cluster
+*service*: a warm node pool outlives any one job, so every frame names the
+job it belongs to — WORK_BATCH/RESULT_BATCH items of two concurrent jobs
+interleave on one connection and the host keeps exactly-once state per
+job.  ``job_id == 0`` means "no job" (bootstrap / pool-control frames:
+REGISTER, HEARTBEAT, the pool-config LOAD, the final UT).
 
 Payload encoding is a three-codec scheme:
 
@@ -60,9 +67,16 @@ except ImportError:  # pragma: no cover
     _HAVE_MSGPACK = False
 
 MAGIC = b"CGPP"
-VERSION = 1
+VERSION = 2  # v2 added the job_id header field (multi-job multiplexing)
 LOAD_WIRE_CHANNEL = 1  # paper §6: the load network uses channel number 1
 APP_WIRE_CHANNEL = 2  # the application network runs on a separate channel
+
+# Warm-code cache slots per node: deserialized stage functions keyed by
+# payload digest.  The host mirrors each node's LRU with the same capacity
+# and the same touch order (frames arrive in send order on one TCP stream),
+# so it knows exactly which digests a node still holds and can skip
+# re-shipping code on a warm resubmit.
+CODE_CACHE_SLOTS = 32
 
 # One liveness default shared by the node beacon (pre- and post-LOAD) and the
 # host's HeartbeatMonitor threshold, so neither side beats at a rate the
@@ -72,7 +86,7 @@ DEFAULT_HEARTBEAT_S = 0.2
 # Guards against a corrupt length field consuming the heap.
 MAX_FRAME_BYTES = 512 * 2**20
 
-_HEADER = struct.Struct("!4sBBBBI")
+_HEADER = struct.Struct("!4sBBBBII")
 
 # How deep the socket's buffered reader reads ahead: one recv syscall
 # typically yields many small frames instead of 2+ recvs per frame.
@@ -89,6 +103,7 @@ class FrameType(enum.IntEnum):
     UT = 7  # either direction: Universal Terminator / timing return
     WORK_BATCH = 8  # HNL -> NL: up to `credits` work objects in one frame
     RESULT_BATCH = 9  # NL -> HNL: coalesced results + piggybacked credits
+    JOB_CLOSE = 10  # HNL -> NL: job finished/failed — drop its bindings
 
 
 class _CodecId(enum.IntEnum):
@@ -123,6 +138,7 @@ class Frame:
     ftype: FrameType
     payload: Any = None
     channel: int = APP_WIRE_CHANNEL
+    job_id: int = 0  # 0 = not job-scoped (bootstrap / pool control)
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +322,8 @@ def pack_frame_buffers(frame: Frame) -> list:
     if length > MAX_FRAME_BYTES:
         raise ValueError(f"frame payload too large: {length} bytes")
     header = _HEADER.pack(
-        MAGIC, VERSION, int(frame.ftype), int(codec), frame.channel, length
+        MAGIC, VERSION, int(frame.ftype), int(codec), frame.channel,
+        frame.job_id, length,
     )
     return [header, *bufs]
 
@@ -336,7 +353,9 @@ def _read_exactly(read, n: int) -> bytes:
 
 def _read_frame_counted(read) -> tuple[Frame, int]:
     header = _read_exactly(read, _HEADER.size)
-    magic, version, ftype, codec, channel, length = _HEADER.unpack(header)
+    magic, version, ftype, codec, channel, job_id, length = (
+        _HEADER.unpack(header)
+    )
     if magic != MAGIC:
         raise ValueError(f"bad frame magic {magic!r}")
     if version != VERSION:
@@ -344,7 +363,9 @@ def _read_frame_counted(read) -> tuple[Frame, int]:
     if length > MAX_FRAME_BYTES:
         raise ValueError(f"frame length {length} exceeds cap")
     raw = _read_exactly(read, length) if length else b""
-    frame = Frame(FrameType(ftype), decode_payload(codec, raw), channel)
+    frame = Frame(
+        FrameType(ftype), decode_payload(codec, raw), channel, job_id
+    )
     return frame, _HEADER.size + length
 
 

@@ -357,6 +357,14 @@ class ClusterBuilder:
           function that mutates its input in place must ``np.copy`` it
           first (the threads backend hands over the original, writable
           array).
+        * ``"service"`` — the same process transport over a *persistent
+          warm node pool* (:class:`repro.cluster.service.ClusterService`).
+          Pass ``service=`` to run this application as one job of a
+          caller-owned pool that stays up (repeat builds of the same spec
+          become warm resubmits: no boot, no code shipped); without it an
+          ephemeral pool sized from the spec boots for this run and closes
+          after.  Remaining ``backend_options`` configure the pool
+          (``nodes=``/``workers=`` geometry comes from the spec).
 
         Runtimes are imported lazily to keep core dependency-free.
         """
@@ -389,6 +397,19 @@ class ClusterBuilder:
             return ProcessClusterApplication(
                 spec=pipe, plan=plan, timing=self.timing, **backend_options
             )
+        if backend == "service":
+            from repro.cluster.service import ServiceClusterApplication
+
+            plan = self.deployment_plan(
+                pipe,
+                hosts=backend_options.get("hosts"),
+                bind_host=backend_options.get("bind_host", "127.0.0.1"),
+                launcher=backend_options.get("launcher"),
+            )
+            return ServiceClusterApplication(
+                spec=pipe, plan=plan, timing=self.timing, **backend_options
+            )
         raise ValueError(
-            f"unknown backend {backend!r}; expected 'threads' or 'cluster'"
+            f"unknown backend {backend!r}; expected 'threads', 'cluster', "
+            "or 'service'"
         )

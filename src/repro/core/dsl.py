@@ -190,6 +190,10 @@ class Stage:
     fn: Callable[[Any], Any]
     nclusters: int = 1
     workers_per_node: int = 1
+    # Per-stage data-plane overrides; None inherits the cluster-wide values
+    # given to the runtime (HostLoader prefetch / flush_interval).
+    prefetch: int | None = None
+    flush_ms: float | None = None
 
     def to_network(self) -> StageNetwork:
         w = self.workers_per_node
@@ -201,6 +205,8 @@ class Stage:
                 group=AnyGroupAny(workers=w, function=self.fn),
                 afoc=AnyFanOne(sources=w),
             ),
+            prefetch=self.prefetch,
+            flush_ms=self.flush_ms,
         )
 
 
@@ -398,6 +404,8 @@ class Pipeline:
         nodes: int = 1,
         workers: int = 1,
         name: str | None = None,
+        prefetch: int | None = None,
+        flush_ms: float | None = None,
     ) -> "Pipeline":
         if self._collect is not None:
             raise ValueError("stage() must precede collect()")
@@ -406,8 +414,13 @@ class Pipeline:
         name = name or f"stage{len(self._stages)}"
         if any(s.name == name for s in self._stages):
             raise ValueError(f"duplicate stage name {name!r}")
+        if prefetch is not None and prefetch < 0:
+            raise ValueError(f"stage {name!r}: prefetch must be >= 0")
+        if flush_ms is not None and flush_ms < 0:
+            raise ValueError(f"stage {name!r}: flush_ms must be >= 0")
         self._stages.append(
-            Stage(name=name, fn=fn, nclusters=nodes, workers_per_node=workers)
+            Stage(name=name, fn=fn, nclusters=nodes, workers_per_node=workers,
+                  prefetch=prefetch, flush_ms=flush_ms)
         )
         return self
 

@@ -177,6 +177,11 @@ class StageNetwork:
     node_net: NodeNetwork
     onrl: OneNodeRequestedList = field(default_factory=OneNodeRequestedList)
     afo: AnyFanOne | None = None
+    # Per-stage data-plane knobs (None = inherit the cluster-wide values):
+    # extra items beyond ``workers`` a node of this stage keeps buffered,
+    # and the node-side result-flush interval in milliseconds.
+    prefetch: int | None = None
+    flush_ms: float | None = None
 
     def __post_init__(self) -> None:
         if self.nclusters < 1:

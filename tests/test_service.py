@@ -1,0 +1,227 @@
+"""The persistent warm cluster service (repro.cluster.service).
+
+One pool, many jobs: concurrent submissions interleaving on the same
+nodes with exactly-once preserved per job (including through a mid-run
+node death), warm resubmission skipping both boot and code shipping,
+FIFO-with-priority admission, failure isolation between jobs, and the
+``backend="service"`` builder path.  Everything runs on 127.0.0.1 with an
+InProcessLauncher (real sockets, real frames, no subprocess cost), so
+tier-1 stays hermetic.
+"""
+
+import time
+
+import pytest
+
+from repro.cluster.deploy.inprocess import InProcessLauncher
+from repro.cluster.service import ClusterService
+from repro.core.builder import ClusterBuilder
+from repro.core.dsl import ClusterSpec
+from repro.core.processes import EmitDetails, ResultDetails
+
+# Fast liveness settings (death detected within ~0.4s).
+FAST = dict(heartbeat_interval=0.1, heartbeat_misses=4)
+
+
+def _range_emit(n):
+    return EmitDetails(
+        name="range",
+        init=lambda limit: (0, limit),
+        init_data=(n,),
+        create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0] + 1, s[1])),
+    )
+
+
+def _list_collect():
+    return ResultDetails(name="list", init=lambda: [],
+                         collect=lambda a, x: a + [x], finalise=sorted)
+
+
+def _spec(work, n_items, *, nclusters=2, workers=2):
+    return ClusterSpec.simple(
+        host="127.0.0.1", nclusters=nclusters, workers_per_node=workers,
+        emit_details=_range_emit(n_items), work_function=work,
+        result_details=_list_collect(),
+    )
+
+
+def _service(**kw):
+    kw.setdefault("nodes", 2)
+    kw.setdefault("workers", 2)
+    kw.setdefault("launcher", InProcessLauncher())
+    kw.update(FAST)
+    return ClusterService(**kw)
+
+
+# Module-level work functions: the same object on every submit, so their
+# cloudpickle digests match and resubmits hit the nodes' code caches.
+def _double(x):
+    return x * 2
+
+
+def _triple(x):
+    return x * 3
+
+
+# ---------------------------------------------------------------------------
+# one pool, many jobs
+# ---------------------------------------------------------------------------
+
+
+def test_back_to_back_jobs_one_pool():
+    """Sequential submits reuse the booted pool: only the first submission
+    is charged boot time, and both produce exact results."""
+    with _service() as svc:
+        h1 = svc.submit(_spec(_double, 30), timeout=60)
+        assert h1.result() == [2 * i for i in range(30)]
+        h2 = svc.submit(_spec(_triple, 30), timeout=60)
+        assert h2.result() == [3 * i for i in range(30)]
+        assert h1.cluster_boot_ms > 0.0
+        assert h2.cluster_boot_ms == 0.0
+    assert svc.orphaned() == []
+
+
+def test_concurrent_jobs_interleave_exactly_once():
+    """Two jobs submitted together share the node pool; each collects its
+    own items exactly once (no cross-job leakage, no loss, no dupes)."""
+    with _service() as svc:
+        h1 = svc.submit(_spec(_double, 40), timeout=60)
+        h2 = svc.submit(_spec(_triple, 40), timeout=60)
+        r1, r2 = h1.result(), h2.result()
+        assert r1 == [2 * i for i in range(40)]
+        assert r2 == [3 * i for i in range(40)]
+        assert h1.stats()["items_collected"] == 40
+        assert h2.stats()["items_collected"] == 40
+    assert svc.orphaned() == []
+
+
+def test_node_death_mid_run_both_jobs_complete():
+    """A node dying with in-flight items of *both* jobs: the host reaps it,
+    requeues per job, and the surviving node finishes both exactly-once."""
+
+    def slow_double(x):
+        time.sleep(0.005)
+        return x * 2
+
+    def slow_triple(x):
+        time.sleep(0.005)
+        return x * 3
+
+    n = 60
+    with _service() as svc:
+        h1 = svc.submit(_spec(slow_double, n), timeout=120)
+        h2 = svc.submit(_spec(slow_triple, n), timeout=120)
+        hl = svc.host_loader
+        deadline = time.monotonic() + 30
+        while hl.stats.items_total < 10:  # both jobs under way
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        svc.kill_node("node1")
+        assert h1.result() == [2 * i for i in range(n)]
+        assert h2.result() == [3 * i for i in range(n)]
+        assert hl.stats.deaths_detected == 1
+        assert hl.stats.redispatched > 0
+    assert svc.orphaned() == []
+
+
+def test_priority_preempts_fifo():
+    """A high-priority job submitted behind a long low-priority one is
+    answered first at every demand: it finishes while the long job is
+    still running."""
+
+    def slow(x):
+        time.sleep(0.01)
+        return x
+
+    with _service(nodes=1, workers=1) as svc:
+        h_low = svc.submit(_spec(slow, 100, nclusters=1, workers=1),
+                           priority=0, timeout=120)
+        h_high = svc.submit(_spec(_double, 5, nclusters=1, workers=1),
+                            priority=5, timeout=120)
+        assert h_high.result() == [2 * i for i in range(5)]
+        assert not h_low.done()  # the long job is still going
+        assert h_low.result() == list(range(100))
+    assert svc.orphaned() == []
+
+
+# ---------------------------------------------------------------------------
+# warm resubmission
+# ---------------------------------------------------------------------------
+
+
+def test_warm_resubmit_skips_boot_and_code():
+    """Resubmitting a pipeline whose stage function the nodes already hold:
+    no boot, no code shipped — the nodes rebind from their digest cache."""
+    with _service() as svc:
+        h1 = svc.submit(_spec(_double, 20), timeout=60)
+        h1.result()
+        s1 = h1.stats()
+        assert s1["code_shipped"] > 0 and s1["code_cached"] == 0
+
+        h2 = svc.submit(_spec(_double, 20), timeout=60)
+        assert h2.result() == h1.result()
+        s2 = h2.stats()
+        assert s2["cluster_boot_ms"] == 0.0
+        assert s2["code_shipped"] == 0  # every node served it from cache
+        assert s2["code_cached"] == s1["code_shipped"]
+        assert h2.submit_to_first_result_ms is not None
+
+
+def test_failed_job_does_not_poison_the_pool():
+    """A work-function error fails *that* job only; the pool stays warm and
+    the next submission runs normally."""
+
+    def cursed(x):
+        if x == 7:
+            raise ValueError("item 7 is cursed")
+        return x
+
+    with _service() as svc:
+        h_bad = svc.submit(_spec(cursed, 20), timeout=60)
+        with pytest.raises(Exception, match="item 7 is cursed"):
+            h_bad.result()
+        h_ok = svc.submit(_spec(_double, 20), timeout=60)
+        assert h_ok.result() == [2 * i for i in range(20)]
+    assert svc.orphaned() == []
+
+
+def test_submit_after_close_rejected():
+    svc = _service()
+    svc.start()
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(_spec(_double, 5))
+
+
+# ---------------------------------------------------------------------------
+# builder integration (backend="service")
+# ---------------------------------------------------------------------------
+
+
+def test_builder_service_backend_ephemeral_pool():
+    """backend="service" with no service= boots an ephemeral pool sized
+    from the spec and tears it down after — the one-shot contract."""
+    app = ClusterBuilder().build_application(
+        _spec(_double, 25), backend="service",
+        launcher=InProcessLauncher(), **FAST,
+    )
+    assert app.run() == [2 * i for i in range(25)]
+    assert app.orphaned() == []
+
+
+def test_builder_service_backend_shared_warm_pool():
+    """Two applications over one caller-owned service: the second build of
+    the same spec is a warm resubmit (no boot, no code shipped)."""
+    with _service() as svc:
+        b = ClusterBuilder()
+        app1 = b.build_application(_spec(_triple, 15), backend="service",
+                                   service=svc)
+        app2 = b.build_application(_spec(_triple, 15), backend="service",
+                                   service=svc)
+        assert app1.run() == [3 * i for i in range(15)]
+        assert app2.run() == app1.result
+        assert app2.handle.cluster_boot_ms == 0.0
+        assert app2.handle.stats()["code_shipped"] == 0
+        # the shared pool survives its applications
+        assert svc.run(_spec(_double, 5)) == [0, 2, 4, 6, 8]
+    assert svc.orphaned() == []

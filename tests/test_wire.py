@@ -201,6 +201,60 @@ def test_heartbeat_interval_shared_between_sides():
     assert HeartbeatMonitor().interval_s == DEFAULT_HEARTBEAT_S
 
 
+# ---------------------------------------------------------------------------
+# job_id header field (wire v2, multi-job multiplexing)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    job_id=st.integers(0, 2**32 - 1),
+    ftype=st.sampled_from([FrameType.WORK_BATCH, FrameType.RESULT_BATCH,
+                           FrameType.LOAD, FrameType.JOB_CLOSE,
+                           FrameType.WORK_REQUEST, FrameType.UT]),
+)
+def test_job_id_roundtrips_on_every_frame_type(job_id, ftype):
+    """The v2 header's job tag survives pack/unpack for the full 32-bit
+    range on every frame type, independent of payload codec."""
+    f = Frame(ftype, {"node_id": "n0"}, wire.APP_WIRE_CHANNEL, job_id=job_id)
+    g = unpack_frame(pack_frame(f))
+    assert g.job_id == job_id
+    assert g.ftype is ftype and g.channel == wire.APP_WIRE_CHANNEL
+
+
+def test_job_id_defaults_to_zero():
+    """job_id 0 = "no job": bootstrap and pool-control frames need no tag,
+    and pre-service callers never mention it."""
+    g = unpack_frame(pack_frame(Frame(FrameType.REGISTER, {"node_id": "n"})))
+    assert g.job_id == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    job_id=st.integers(1, 2**32 - 1),
+    dtype=st.sampled_from(DTYPES),
+    n=st.integers(0, 16),
+)
+def test_job_id_roundtrips_with_ndarray_batches(job_id, dtype, n):
+    """A codec-2 (zero-copy ndarray) result batch keeps its job tag — the
+    header field and the multi-buffer payload path must not interfere."""
+    a = (np.arange(n * 3) % 11).astype(dtype).reshape(n, 3)
+    f = Frame(FrameType.RESULT_BATCH, a, wire.APP_WIRE_CHANNEL,
+              job_id=job_id)
+    g = unpack_frame(pack_frame(f))
+    assert g.job_id == job_id
+    assert np.array_equal(g.payload, a) and g.payload.dtype == a.dtype
+
+    nested = {"node_id": "n0", "credits": 1,
+              "results": [{"id": 0, "s": 0, "value": a}]}
+    g = unpack_frame(pack_frame(
+        Frame(FrameType.RESULT_BATCH, nested, wire.APP_WIRE_CHANNEL,
+              job_id=job_id)
+    ))
+    assert g.job_id == job_id
+    assert np.array_equal(g.payload["results"][0]["value"], a)
+
+
 def test_wire_counters_track_traffic():
     import socket
 
