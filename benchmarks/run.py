@@ -177,7 +177,7 @@ def _run_spec(nclusters: int, workers: int, backend: str = "threads",
     t0 = time.perf_counter()
     result = app.run()
     dt = time.perf_counter() - t0
-    return dt, result, builder.timing
+    return dt, result, builder.timing, app
 
 
 def _warm(max_iters: int = MAX_ITERS) -> None:
@@ -200,7 +200,7 @@ def table1_worker_scaling() -> list[str]:
     rows = []
     base = None
     for w in (1, 2, 4, 8):
-        dt, result, _ = _run_spec(1, w)
+        dt, result, _, _app = _run_spec(1, w)
         base = base or dt
         speedup = base / dt
         eff = speedup / w
@@ -217,7 +217,7 @@ def table2_cluster_scaling() -> list[str]:
     rows = []
     base = None
     for nodes in (1, 2, 3):
-        dt, _result, timing = _run_spec(nodes, 4)
+        dt, _result, timing, _app = _run_spec(nodes, 4)
         base = base or dt
         speedup = base / dt
         eff = speedup / nodes
@@ -251,7 +251,7 @@ def table4_threads_vs_processes() -> list[str]:
     rows = []
     expected = None
     for backend in ("threads", "cluster"):
-        dt, result, timing = _run_spec(2, 2, backend=backend, **size_kw)
+        dt, result, timing, app = _run_spec(2, 2, backend=backend, **size_kw)
         expected = expected or result
         items = {t.node_id: t.items for t in timing.nodes
                  if t.node_id.startswith("node")}
@@ -271,6 +271,9 @@ def table4_threads_vs_processes() -> list[str]:
             comparison[backend]["launcher"] = (
                 f"ssh:{','.join(SSH_HOSTS)}" if SSH_HOSTS else "local"
             )
+            # The run's final telemetry snapshot (same JSON GET /metrics
+            # serves): per-job gauges, per-node wire/cache counters, events.
+            comparison[backend]["metrics"] = app.metrics_snapshot()
         rows.append(
             f"table4_{backend}_nodes2_workers2,{dt * 1e6:.0f},"
             f"points={result[2]}"
@@ -349,7 +352,7 @@ def warm_resubmit() -> list[str]:
 
     size_kw = dict(lines=T4_LINES, max_iters=T4_MAX_ITERS)
     # The threads baseline the warm submissions are judged against.
-    dt_threads, expected, _ = _run_spec(2, 2, backend="threads", **size_kw)
+    dt_threads, expected, _, _app = _run_spec(2, 2, backend="threads", **size_kw)
     # One spec object resubmitted as-is: identical function objects pickle
     # to identical bytes, which is what makes the digest cache hit.
     spec = _mandelbrot_spec(2, 2, **size_kw)
@@ -367,11 +370,15 @@ def warm_resubmit() -> list[str]:
             preload=("repro.kernels.mandelbrot.ops",),
             compile_cache_dir=os.path.abspath(COMPILE_CACHE),
         )
+    # REPRO_BENCH_HTTP_PORT exposes the live status endpoint for the run
+    # (CI's service-smoke curls /metrics and / mid-bench through it).
+    http_port = os.environ.get("REPRO_BENCH_HTTP_PORT")
     svc = ClusterService(
         nodes=2, workers=2,
         launcher=launcher,
         bind_host=BIND_HOST,
         register_timeout=120.0,
+        http_port=int(http_port) if http_port else None,
     )
     try:
         with svc:
@@ -414,6 +421,16 @@ def warm_resubmit() -> list[str]:
                 f"results_match="
                 f"{all(c['results_match'] for c in record['concurrent'])}"
             )
+            # Final /metrics snapshot while the pool is still up: per-job
+            # gauges, per-node wire + warm-cache counters, event cursor.
+            record["metrics"] = svc.metrics_snapshot()
+            # REPRO_BENCH_HOLD_S keeps the warm pool (and its endpoint) up
+            # after the runs so an external prober has a window to read
+            # jobs_completed >= 1 — the runs themselves finish in well
+            # under a second once warm.
+            hold = float(os.environ.get("REPRO_BENCH_HOLD_S", "0") or 0)
+            if hold > 0:
+                time.sleep(hold)
     finally:
         record["orphaned"] = svc.orphaned()
 
@@ -567,8 +584,8 @@ def table3_multicore_vs_cluster() -> list[str]:
     """Paper Table 3: same worker-core count, one node vs many nodes."""
     rows = []
     for cores in (4, 8):
-        dt_multi, _r1, _ = _run_spec(1, cores)  # "multicore": 1 node
-        dt_cluster, _r2, _ = _run_spec(cores // 4, 4)  # 4-core nodes
+        dt_multi, _r1, _, _app = _run_spec(1, cores)  # "multicore": 1 node
+        dt_cluster, _r2, _, _app2 = _run_spec(cores // 4, 4)  # 4-core nodes
         diff = (dt_cluster - dt_multi) / dt_cluster * 100
         rows.append(
             f"table3_cores_{cores},{dt_cluster * 1e6:.0f},"

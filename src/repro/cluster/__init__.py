@@ -32,7 +32,13 @@ Modules (one per architectural role):
   node-loader command fanned out over ssh, with rsync/tar code sync) and
   InProcessLauncher (threads, for launcher-logic tests);
 * :mod:`repro.cluster.spawn` — ProcessClusterApplication: cluster lifecycle
-  + placement policy over whichever launcher the deployment chose.
+  + placement policy over whichever launcher the deployment chose;
+* :mod:`repro.cluster.service` — ClusterService: a persistent warm node pool
+  multiplexing many jobs over one bootstrap (digest-keyed warm code cache,
+  FIFO-with-priority scheduling);
+* :mod:`repro.cluster.telemetry` — live observability: the event bus +
+  metrics registry every host-side component publishes into, the
+  ``GET /metrics`` / dashboard HTTP endpoint, and the JSONL trace writer.
 
 This package must stay importable without jax: the node-loader bootstrap path
 (wire/netchannels/membership/node_loader) imports no accelerator code; user

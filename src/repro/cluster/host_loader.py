@@ -83,6 +83,7 @@ from typing import Any, Callable, Iterator, Sequence
 
 from repro.cluster.deploy.base import PlacementPolicy
 from repro.cluster.membership import LAUNCHING, Membership, NodeRecord
+from repro.cluster.telemetry import Telemetry
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
     CODE_CACHE_SLOTS,
@@ -169,6 +170,13 @@ class JobState:
         # Warm-load accounting (per job, summed over nodes).
         self.code_shipped = 0
         self.code_cached = 0
+        # Per-job observability counters the telemetry gauges report; the
+        # per-node splits let JobHandle.stats() attribute work and cache
+        # behaviour to individual pool members.
+        self.duplicates_dropped = 0
+        self.forwarded = 0
+        self.items_by_node: dict[str, int] = {}
+        self.cache_by_node: dict[str, dict[str, int]] = {}
 
     # -- farm state machine -------------------------------------------------
 
@@ -236,6 +244,7 @@ class HostLoader:
         relaunch: Callable[[str, str], bool] | None = None,
         pool_nodes: int | None = None,
         pool_workers: int = 1,
+        telemetry: Telemetry | None = None,
     ):
         if spec is not None:
             if hasattr(spec, "as_pipeline"):
@@ -276,6 +285,16 @@ class HostLoader:
         self.flush_interval = flush_interval
         self.stats = HostStats()
         self.result: Any = None
+
+        # Telemetry: lifecycle events and slow gauges are *pushed* from the
+        # dispatcher at state changes; fast-moving values the host already
+        # maintains (wire counters, parked credits, HostStats) are *pulled*
+        # at snapshot time through the samplers — the hot paths pay nothing.
+        self.telemetry = telemetry or Telemetry()
+        self.telemetry.set_sampler("nodes", self._sample_nodes)
+        self.telemetry.set_sampler("cluster", self._sample_cluster)
+        self.telemetry.set_sampler("timing", self.timing.summary)
+        self.membership.on_transition = self._on_node_transition
 
         # Job table.  Written by the dispatcher (admission/completion) and
         # by __init__ (the primary job); submit_job only allocates ids.
@@ -320,6 +339,9 @@ class HostLoader:
         job = self._new_job(spec, pinned=False, priority=priority,
                             timeout=timeout)
         job.submitted_at = time.monotonic()
+        self.telemetry.inc("jobs_submitted")
+        self.telemetry.emit("job_submit", job=job.job_id,
+                            priority=priority, stages=job.S)
         self._events.put(("submit", job))
         return job
 
@@ -327,6 +349,8 @@ class HostLoader:
         self._jobs[job.job_id] = job
         if job.timeout is not None:
             job.deadline = time.monotonic() + job.timeout
+        self.telemetry.emit("job_admit", job=job.job_id)
+        self._publish_job(job)
         for rec in self.membership.nodes.values():
             if rec.alive:
                 self._send_load(rec, job)
@@ -415,6 +439,10 @@ class HostLoader:
             self._events.put(ev)
         self._early_events.clear()
         job.submitted_at = time.monotonic()
+        self.telemetry.inc("jobs_submitted")
+        self.telemetry.emit("job_submit", job=job.job_id,
+                            priority=job.priority, stages=job.S)
+        self._publish_job(job)
         if self.job_timeout is not None:
             job.deadline = job.submitted_at + self.job_timeout
         with self.timing.phase("host", "run"):
@@ -441,6 +469,8 @@ class HostLoader:
         for ev in self._early_events:
             self._events.put(ev)
         self._early_events.clear()
+        self.telemetry.emit("pool_ready",
+                            nodes=self.membership.arrived_count())
         self.pool_ready.set()
         try:
             with self.timing.phase("host", "run"):
@@ -504,6 +534,11 @@ class HostLoader:
                                           [frame.payload], 0)
                 elif frame.ftype is FrameType.HEARTBEAT:
                     self.membership.beat(node_id)
+                    rep = (frame.payload or {}).get("report")
+                    if rep:
+                        # Node-side phase/cache counters piggybacked on the
+                        # beat — the only node->host telemetry channel.
+                        self.telemetry.set_node(node_id, report=rep)
                 elif frame.ftype is FrameType.UT:
                     self._node_finished(node_id, frame.payload)
             elif kind == "loaded":
@@ -540,6 +575,7 @@ class HostLoader:
                     conn.close()  # duplicate of a live member
                     continue
                 self.stats.late_joins += 1
+                self.telemetry.emit("late_join", node=node_id, address=addr)
                 if self._primary is not None:
                     self._send_load(rec, self._primary)
                 else:
@@ -578,6 +614,7 @@ class HostLoader:
             job.inflight[s][item_id] = (rec.node_id, obj)
         self.stats.work_batches += 1
         self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        self._publish_job(job)
         return True
 
     def _send_ut(self, node_id: str) -> None:
@@ -676,6 +713,7 @@ class HostLoader:
             job.inflight[s].pop(p["id"], None)
             if p["id"] in job.done_ids[s]:
                 self.stats.duplicates_dropped += 1
+                job.duplicates_dropped += 1
             else:
                 job.done_ids[s].add(p["id"])
                 if s + 1 < job.S:
@@ -685,15 +723,19 @@ class HostLoader:
                                                p["value"]))
                     job.next_id[s + 1] += 1
                     self.stats.forwarded += 1
+                    job.forwarded += 1
                 else:
                     job.acc = job.r_details.collect(job.acc, p["value"])
                     job.items_collected += 1
                     if job.first_result_at is None:
                         job.first_result_at = time.monotonic()
                     self.stats.items_total += 1
+                job.items_by_node[node_id] = \
+                    job.items_by_node.get(node_id, 0) + 1
                 rec = self.membership.nodes[node_id]
                 rec.items_done += 1
                 self.timing.count_item(node_id)
+        self._publish_job(job)
         if credits:
             self._answer(node_id, credits)
         # Forwarded items may satisfy parked downstream demand, and a
@@ -710,6 +752,13 @@ class HostLoader:
             return
         job.result = job.r_details.finalise(job.acc)
         job.done.set()
+        self.telemetry.inc("jobs_completed")
+        elapsed_ms = None
+        if job.submitted_at is not None:
+            elapsed_ms = round((time.monotonic() - job.submitted_at) * 1e3, 3)
+        self.telemetry.emit("job_done", job=job.job_id,
+                            items=job.items_collected, elapsed_ms=elapsed_ms)
+        self._publish_job(job)
         if not job.pinned:
             self._send_job_close(job)
 
@@ -718,6 +767,9 @@ class HostLoader:
             return
         job.error = exc
         job.done.set()
+        self.telemetry.inc("jobs_failed")
+        self.telemetry.emit("job_failed", job=job.job_id, error=str(exc))
+        self._publish_job(job)
         if not job.pinned:
             self._send_job_close(job)
 
@@ -827,6 +879,10 @@ class HostLoader:
                     # Degraded start: the survivors carry the job; the
                     # demand-driven protocol needs no topology change.
                     self.stats.degraded_start = arrived < expected
+                    if self.stats.degraded_start:
+                        self.telemetry.emit("degraded_start",
+                                            arrived=arrived,
+                                            expected=expected)
                     return
                 raise TimeoutError(
                     f"only {arrived}/{expected} node-loaders registered "
@@ -853,6 +909,9 @@ class HostLoader:
                 _, node_id, frame = event
                 if frame.ftype is FrameType.HEARTBEAT:
                     self.membership.beat(node_id)
+                    rep = (frame.payload or {}).get("report")
+                    if rep:
+                        self.telemetry.set_node(node_id, report=rep)
                 else:
                     self._early_events.append(event)
                 continue
@@ -895,6 +954,7 @@ class HostLoader:
         nrec = self.membership.expect(new_id)
         nrec.attempts = rec.attempts + 1
         self.stats.respawns += 1
+        self.telemetry.emit("respawn", node=rec.node_id, replacement=new_id)
         return True
 
     # -- code shipping ------------------------------------------------------
@@ -908,18 +968,22 @@ class HostLoader:
         else:
             s_list = list(range(job.S))
         entries = []
+        cache = job.cache_by_node.setdefault(rec.node_id,
+                                             {"hits": 0, "misses": 0})
         for s in s_list:
             digest, blob = job.stage_code[s]
             if digest in rec.code_digests:
                 rec.code_digests.move_to_end(digest)
                 fn_blob = None
                 job.code_cached += 1
+                cache["hits"] += 1
             else:
                 rec.code_digests[digest] = None
                 while len(rec.code_digests) > CODE_CACHE_SLOTS:
                     rec.code_digests.popitem(last=False)
                 fn_blob = blob
                 job.code_shipped += 1
+                cache["misses"] += 1
             entries.append({"s": s, "stage": job.spec.stages[s].name,
                             "digest": digest, "function": fn_blob})
         return entries
@@ -1003,6 +1067,8 @@ class HostLoader:
         self.timing.add(node_id, "boot", float(timing.get("boot_ms", 0.0)))
         self.timing.add(node_id, "load", float(timing.get("load_ms", 0.0)))
         self.timing.add(node_id, "run", float(timing.get("run_ms", 0.0)))
+        self.telemetry.emit("node_done", node=node_id,
+                            items=int(timing.get("items", 0)))
 
     def _collect_wire_stats(self) -> None:
         """Fold per-connection traffic counters + protocol counters into the
@@ -1022,6 +1088,86 @@ class HostLoader:
         # piggybacked result batch) plus its answer.
         agg["round_trips"] = self.stats.work_requests + self.stats.result_batches
         self.timing.add_wire(**agg)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _on_node_transition(self, rec: NodeRecord, old: str) -> None:
+        """Membership hook (dispatcher thread): every node state change
+        becomes one bus event plus a node gauge update."""
+        self.telemetry.emit("membership", node=rec.node_id, state=rec.state,
+                            prev=old)
+        self.telemetry.set_node(rec.node_id, state=rec.state)
+
+    def _publish_job(self, job: JobState) -> None:
+        """Push one job's farm gauges (dispatcher thread, per state change /
+        batch — never per item)."""
+        self.telemetry.set_job(
+            job.job_id,
+            priority=job.priority,
+            stages=job.S,
+            pending=[len(q) for q in job.pending],
+            inflight=[len(f) for f in job.inflight],
+            items_collected=job.items_collected,
+            duplicates_dropped=job.duplicates_dropped,
+            forwarded=job.forwarded,
+            code_shipped=job.code_shipped,
+            code_cached=job.code_cached,
+            done=job.done.is_set(),
+            error=None if job.error is None else str(job.error),
+        )
+
+    def _sample_nodes(self) -> dict:
+        """Pull-side node fields, read on the snapshot caller's thread.
+
+        The dispatcher mutates ``membership.nodes`` (and each record)
+        concurrently; rather than lock the protocol hot path, dict
+        iteration simply retries on RuntimeError — the values are
+        monotonic-enough counters where a midway-consistent read is fine
+        for reporting.
+        """
+        for _ in range(8):
+            try:
+                out = {}
+                for rec in list(self.membership.nodes.values()):
+                    fields = {
+                        "state": rec.state,
+                        "address": rec.address,
+                        "items": rec.items_done,
+                        "credits": rec.credits,
+                        "beats": rec.beats,
+                        "attempts": rec.attempts,
+                        "state_changed_at": round(rec.state_changed_at, 6),
+                        "transitions": [
+                            {"state": s, "at": round(at, 6)}
+                            for s, at in list(rec.transitions)[-8:]
+                        ],
+                    }
+                    if rec.conn is not None:
+                        fields["wire"] = rec.conn.counters.as_dict()
+                    out[rec.node_id] = fields
+                return out
+            except RuntimeError:
+                continue
+        return {}
+
+    def _sample_cluster(self) -> dict:
+        """Pull-side cluster counters: the HostStats the dispatcher already
+        maintains, plus liveness/credit aggregates."""
+        out = dict(vars(self.stats))
+        for _ in range(8):
+            try:
+                nodes = list(self.membership.nodes.values())
+                jobs = list(self._jobs.values())
+                break
+            except RuntimeError:
+                continue
+        else:
+            return out
+        out["nodes_total"] = len(nodes)
+        out["nodes_alive"] = sum(1 for r in nodes if r.alive)
+        out["credits_parked"] = sum(r.credits for r in nodes if r.alive)
+        out["jobs_active"] = sum(1 for j in jobs if j.active)
+        return out
 
     # -- teardown -----------------------------------------------------------
 
@@ -1043,3 +1189,4 @@ class HostLoader:
         for rec in self.membership.nodes.values():
             if rec.conn is not None:
                 rec.conn.close()
+        self.telemetry.close()  # flush the trace; the bus itself stays readable

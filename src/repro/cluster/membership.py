@@ -69,6 +69,11 @@ class NodeRecord:
     )
     timing: dict[str, Any] = field(default_factory=dict)
     conn: Any = None  # FrameConnection; opaque to this module
+    # Observability: when the current state was entered, and the full
+    # (state, monotonic time) history — the events feed and dashboard show
+    # *when* a node registered/died/was replaced, not just that it did.
+    state_changed_at: float = 0.0
+    transitions: list = field(default_factory=list)
 
     @property
     def alive(self) -> bool:
@@ -82,6 +87,22 @@ class Membership:
         self.monitor = monitor or HeartbeatMonitor()
         self.nodes: dict[str, NodeRecord] = {}
         self.failures: list[FailureEvent] = []
+        # Observability hook: called as on_transition(rec, old_state) after
+        # every state change.  The host loader wires this to the telemetry
+        # bus; pure-bookkeeping users leave it None.
+        self.on_transition: Any = None
+
+    def _transition(self, rec: NodeRecord, state: str,
+                    now: float | None = None) -> None:
+        """Single choke point for state changes: stamps the time, records
+        the history, and fires ``on_transition``."""
+        now = time.monotonic() if now is None else now
+        old = rec.state
+        rec.state = state
+        rec.state_changed_at = now
+        rec.transitions.append((state, now))
+        if self.on_transition is not None:
+            self.on_transition(rec, old)
 
     def expect(self, node_id: str, now: float | None = None) -> NodeRecord:
         """Announce a launch: a record in LAUNCHING until REGISTER arrives."""
@@ -94,7 +115,9 @@ class Membership:
             address="",
             state=LAUNCHING,
             launched_at=now,
+            state_changed_at=now,
         )
+        rec.transitions.append((LAUNCHING, now))
         self.nodes[node_id] = rec
         return rec
 
@@ -113,8 +136,8 @@ class Membership:
             rec.cores = cores
             rec.pid = pid
             rec.conn = conn
-            rec.state = REGISTERED
             rec.registered_at = rec.last_beat = now
+            self._transition(rec, REGISTERED, now)
             return rec
         rec = NodeRecord(
             node_id=node_id,
@@ -126,8 +149,10 @@ class Membership:
             registered_at=now,
             last_beat=now,
             conn=conn,
+            state=LAUNCHING,
         )
         self.nodes[node_id] = rec
+        self._transition(rec, REGISTERED, now)
         return rec
 
     def replace(self, node_id: str) -> NodeRecord:
@@ -137,7 +162,7 @@ class Membership:
             raise ValueError(
                 f"cannot replace {node_id!r} in state {rec.state!r}"
             )
-        rec.state = REPLACED
+        self._transition(rec, REPLACED)
         return rec
 
     def beat(self, node_id: str, now: float | None = None) -> None:
@@ -148,11 +173,11 @@ class Membership:
         rec.beats += 1
 
     def mark_loaded(self, node_id: str) -> None:
-        self.nodes[node_id].state = LOADED
+        self._transition(self.nodes[node_id], LOADED)
 
     def mark_done(self, node_id: str, timing: dict[str, Any] | None = None) -> None:
         rec = self.nodes[node_id]
-        rec.state = DONE
+        self._transition(rec, DONE)
         if timing:
             rec.timing = dict(timing)
 
@@ -160,7 +185,7 @@ class Membership:
         rec = self.nodes.get(node_id)
         if rec is None or rec.state == DEAD:
             return None
-        rec.state = DEAD
+        self._transition(rec, DEAD)
         rec.credits = 0  # a dead node's parked demand can never be answered
         ev = FailureEvent(step=at_item, kind="node_loss", node=rec.index)
         self.failures.append(ev)
@@ -203,11 +228,14 @@ class Membership:
         return all(r.state not in (REGISTERED, LOADED)
                    for r in self.nodes.values())
 
-    def describe(self) -> str:
-        lines = [f"{'node':<10}{'state':<12}{'addr':<22}{'beats':>6}{'items':>7}"]
+    def describe(self, now: float | None = None) -> str:
+        now = time.monotonic() if now is None else now
+        lines = [f"{'node':<10}{'state':<12}{'addr':<22}{'beats':>6}"
+                 f"{'items':>7}{'in-state':>10}"]
         for r in sorted(self.nodes.values(), key=lambda r: r.index):
+            in_state = now - r.state_changed_at if r.state_changed_at else 0.0
             lines.append(
                 f"{r.node_id:<10}{r.state:<12}{r.address:<22}"
-                f"{r.beats:>6d}{r.items_done:>7d}"
+                f"{r.beats:>6d}{r.items_done:>7d}{in_state:>9.1f}s"
             )
         return "\n".join(lines)

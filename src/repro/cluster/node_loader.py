@@ -160,11 +160,18 @@ def run_node(
     stop_beat = threading.Event()
     beat_interval = [DEFAULT_HEARTBEAT_S]
 
+    # Node-side telemetry, piggybacked on every beat — the only node->host
+    # reporting channel that exists before UT.  Mutated in place by the
+    # load/worker paths (single-value updates; a torn read costs nothing).
+    report = {"boot_ms": 0.0, "load_ms": 0.0, "items": 0,
+              "cache_hits": 0, "cache_misses": 0, "jobs_bound": 0}
+
     def heartbeat() -> None:
         while not stop_beat.wait(beat_interval[0]):
             try:
                 conn.send(Frame(
-                    FrameType.HEARTBEAT, {"node_id": node_id},
+                    FrameType.HEARTBEAT,
+                    {"node_id": node_id, "report": dict(report)},
                     LOAD_WIRE_CHANNEL,
                 ))
             except OSError:
@@ -179,6 +186,7 @@ def run_node(
     # simply wait in the kernel socket buffer until it joins.
     preload_thread.join()
     boot_ms = (time.perf_counter() - t_boot0) * 1e3
+    report["boot_ms"] = round(boot_ms, 3)
     load_ms = 0.0
     items_done = 0
     run_ms = 0.0
@@ -293,6 +301,7 @@ def run_node(
                 continue
             with items_lock:
                 items_done += 1
+                report["items"] = items_done
 
     worker_threads: list[threading.Thread] = []
     flush_thread = threading.Thread(target=flusher, name="nl-flusher",
@@ -300,6 +309,7 @@ def run_node(
     t_run0 = time.perf_counter()
 
     def bind_stages(job_id: int, plan: dict) -> None:
+        bound = False
         for entry in plan.get("stages", ()):
             digest = entry["digest"]
             blob = entry["function"]
@@ -308,13 +318,18 @@ def run_node(
                 code_cache[digest] = fn
                 while len(code_cache) > CODE_CACHE_SLOTS:
                     code_cache.popitem(last=False)
+                report["cache_misses"] += 1
             else:
                 # The host's LRU mirror says we still hold it — if the two
                 # ever diverged this KeyError kills the node, the host reaps
                 # it and redispatches: degraded, not wrong.
                 fn = code_cache[digest]
                 code_cache.move_to_end(digest)
+                report["cache_hits"] += 1
             fns[(job_id, int(entry["s"]))] = fn
+            bound = True
+        if bound:
+            report["jobs_bound"] += 1
 
     def apply_load(job_id: int, plan: dict) -> None:
         nonlocal configured, workers, slowdown, window
@@ -388,6 +403,7 @@ def run_node(
                 t0 = time.perf_counter()
                 apply_load(frame.job_id, frame.payload)
                 load_ms += (time.perf_counter() - t0) * 1e3
+                report["load_ms"] = round(load_ms, 3)
             elif frame.ftype is FrameType.WORK_BATCH:
                 for item in frame.payload["items"]:
                     work_q.put((frame.job_id, item))

@@ -42,6 +42,7 @@ from typing import Any, Sequence
 
 from repro.cluster.deploy.base import Launcher, NodeHandle, PlacementPolicy
 from repro.cluster.host_loader import HostLoader, JobState
+from repro.cluster.telemetry import Telemetry, TelemetryServer
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor
 
@@ -51,8 +52,10 @@ __all__ = ["ClusterService", "JobHandle", "ServiceClusterApplication"]
 class JobHandle:
     """A submitted job's future: wait on it, read its result and timings."""
 
-    def __init__(self, job: JobState, cluster_boot_ms: float):
+    def __init__(self, job: JobState, cluster_boot_ms: float,
+                 host_loader: HostLoader | None = None):
         self._job = job
+        self._host_loader = host_loader
         #: What this submission paid for cluster boot: the pool's boot time
         #: on the submission that triggered it, ``0.0`` on every warm one.
         self.cluster_boot_ms = cluster_boot_ms
@@ -90,16 +93,36 @@ class JobHandle:
         return (self._job.first_result_at - self._job.submitted_at) * 1e3
 
     def stats(self) -> dict[str, Any]:
+        # Per-node attribution: which pool members did this job's work,
+        # whether each got its code warm, and (when the pool is reachable)
+        # the node's connection-level wire counters.  Sums reconcile with
+        # the job-level figures: sum(items) == items_collected + forwarded,
+        # sum(cache_hits) == code_cached, sum(cache_misses) == code_shipped.
+        nodes: dict[str, dict[str, Any]] = {}
+        for nid, n in self._job.items_by_node.items():
+            nodes.setdefault(nid, {})["items"] = n
+        for nid, cache in self._job.cache_by_node.items():
+            d = nodes.setdefault(nid, {})
+            d["cache_hits"] = cache["hits"]
+            d["cache_misses"] = cache["misses"]
+        if self._host_loader is not None:
+            for nid, d in nodes.items():
+                rec = self._host_loader.membership.nodes.get(nid)
+                if rec is not None and rec.conn is not None:
+                    d["wire"] = rec.conn.counters.as_dict()
         return {
             "job_id": self._job.job_id,
             "priority": self._job.priority,
             "items_collected": self._job.items_collected,
+            "duplicates_dropped": self._job.duplicates_dropped,
+            "forwarded": self._job.forwarded,
             # Warm-load accounting: stage functions shipped by value vs
             # rebound from the nodes' digest-keyed code caches.
             "code_shipped": self._job.code_shipped,
             "code_cached": self._job.code_cached,
             "cluster_boot_ms": self.cluster_boot_ms,
             "submit_to_first_result_ms": self.submit_to_first_result_ms,
+            "nodes": nodes,
         }
 
 
@@ -133,6 +156,10 @@ class ClusterService:
         allow_late_join: bool = True,
         shutdown_grace: float = 10.0,
         timing: TimingCollector | None = None,
+        telemetry: Telemetry | None = None,
+        trace_path: str | None = None,
+        http_host: str = "127.0.0.1",
+        http_port: int | None = None,
     ):
         if launcher is not None and hosts is not None:
             raise TypeError("pass either launcher= or hosts=, not both")
@@ -158,6 +185,13 @@ class ClusterService:
         self.allow_late_join = allow_late_join
         self.shutdown_grace = shutdown_grace
         self.timing = timing or TimingCollector()
+        # Observability: one bus for the pool's whole life.  ``http_port``
+        # None = no endpoint; 0 = an ephemeral port (read ``.http_url``);
+        # ``trace_path`` appends every lifecycle event as one JSON line.
+        self.telemetry = telemetry or Telemetry(trace_path=trace_path)
+        self.http_host = http_host
+        self.http_port = http_port
+        self.http_server: TelemetryServer | None = None
 
         self.host_loader: HostLoader | None = None
         self.handles: dict[str, NodeHandle] = {}
@@ -223,7 +257,14 @@ class ClusterService:
             relaunch=self._relaunch,
             pool_nodes=self.nodes,
             pool_workers=self.workers,
+            telemetry=self.telemetry,
         )
+        # The endpoint comes up before the barrier so an operator can watch
+        # LAUNCHING -> REGISTERED -> LOADED roll in live.
+        if self.http_port is not None and self.http_server is None:
+            self.http_server = TelemetryServer(
+                self.telemetry, host=self.http_host, port=self.http_port,
+            )
         self.host_loader.start()
         self.launcher.prepare(self.bind_host, self.host_loader.port)
         for node_id in node_ids:
@@ -273,7 +314,8 @@ class ClusterService:
         with self._lock:
             boot = 0.0 if self._boot_charged else (self.boot_ms or 0.0)
             self._boot_charged = True
-        return JobHandle(job, cluster_boot_ms=boot)
+        return JobHandle(job, cluster_boot_ms=boot,
+                         host_loader=self.host_loader)
 
     def run(self, spec, *, priority: int = 0,
             timeout: float | None = None) -> Any:
@@ -284,6 +326,18 @@ class ClusterService:
         """Hard-kill one pool node: a real workstation loss, detected only
         by its heartbeats going silent (in-flight work is redispatched)."""
         self.handles[node_id].kill()
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def http_url(self) -> str | None:
+        """Base URL of the status endpoint (None when not serving)."""
+        return None if self.http_server is None else self.http_server.url
+
+    def metrics_snapshot(self) -> dict[str, Any]:
+        """The same JSON ``GET /metrics`` serves, as a dict — benchmarks
+        record it next to their timing numbers."""
+        return self.telemetry.snapshot()
 
     # -- teardown -----------------------------------------------------------
 
@@ -317,6 +371,9 @@ class ClusterService:
                 join()
         if self.launcher is not None:
             self.launcher.close()
+        if self.http_server is not None:
+            self.http_server.close()
+        self.telemetry.close()  # flush the trace even if start() never ran
 
     def orphaned(self) -> list[str]:
         """Node-loaders still running after close (must be empty)."""

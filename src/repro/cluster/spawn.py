@@ -35,6 +35,7 @@ from repro.cluster.deploy.local import (  # noqa: F401  (compat re-exports)
     spawn_node_loader,
 )
 from repro.cluster.host_loader import HostLoader
+from repro.cluster.telemetry import Telemetry, TelemetryServer
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor
 
@@ -89,6 +90,15 @@ class ProcessClusterApplication:
     max_respawns: int = 0
     respawn_after: float | None = None
     allow_late_join: bool = True
+    # -- observability ------------------------------------------------------
+    # ``http_port``: None = no status endpoint, 0 = ephemeral (read
+    # ``http_url`` after start).  ``trace_path`` appends the run's lifecycle
+    # events as JSONL for offline replay.
+    telemetry: Telemetry | None = None
+    trace_path: str | None = None
+    http_host: str = "127.0.0.1"
+    http_port: int | None = None
+    http_server: TelemetryServer | None = None
 
     host_loader: HostLoader | None = None
     handles: dict[str, NodeHandle] = field(default_factory=dict)
@@ -149,6 +159,8 @@ class ProcessClusterApplication:
                     compile_cache_dir=self.compile_cache_dir,
                 )
         node_ids = self.node_ids()
+        if self.telemetry is None:
+            self.telemetry = Telemetry(trace_path=self.trace_path)
         self.host_loader = HostLoader(
             self.spec,
             self.timing,
@@ -173,7 +185,12 @@ class ProcessClusterApplication:
             ),
             expected_nodes=node_ids,
             relaunch=self._relaunch,
+            telemetry=self.telemetry,
         )
+        if self.http_port is not None and self.http_server is None:
+            self.http_server = TelemetryServer(
+                self.telemetry, host=self.http_host, port=self.http_port,
+            )
         self.host_loader.start()
         # The bind address goes through verbatim: each launcher knows how to
         # resolve an unroutable "0.0.0.0" (loopback for local launchers; an
@@ -252,6 +269,22 @@ class ProcessClusterApplication:
                 join()
         if self.launcher is not None:
             self.launcher.close()
+        if self.http_server is not None:
+            self.http_server.close()
+        if self.telemetry is not None:
+            self.telemetry.close()
+
+    @property
+    def http_url(self) -> str | None:
+        """Base URL of the status endpoint (None when not serving)."""
+        return None if self.http_server is None else self.http_server.url
+
+    def metrics_snapshot(self) -> dict[str, Any]:
+        """The ``GET /metrics`` JSON as a dict (usable after shutdown too —
+        the bus outlives the sockets)."""
+        if self.telemetry is None:
+            self.telemetry = Telemetry(trace_path=self.trace_path)
+        return self.telemetry.snapshot()
 
     def orphaned(self) -> list[str]:
         """Node-loaders still running after shutdown (must be empty)."""

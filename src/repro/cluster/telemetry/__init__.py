@@ -1,0 +1,27 @@
+"""repro.cluster.telemetry — live observability for the cluster.
+
+Three pieces, all stdlib-only (this package must import without jax, like
+the rest of the node-loader bootstrap path):
+
+* :mod:`~repro.cluster.telemetry.registry` — the thread-safe event bus +
+  metrics registry every host-side component publishes into, plus the
+  JSONL trace writer for offline replay;
+* :mod:`~repro.cluster.telemetry.http` — the ``GET /metrics`` / ``/jobs``
+  / ``/nodes`` / ``/events`` status endpoint (JSON + Prometheus text);
+* :mod:`~repro.cluster.telemetry.dashboard` — the self-contained HTML
+  dashboard served at ``GET /``.
+
+See ARCHITECTURE.md "Observability" for how the host loader, membership
+layer, node heartbeats, and service scheduler feed it.
+"""
+
+from repro.cluster.telemetry.http import TelemetryServer  # noqa: F401
+from repro.cluster.telemetry.registry import (  # noqa: F401
+    Telemetry,
+    TraceWriter,
+    read_trace,
+    total_counts,
+)
+
+__all__ = ["Telemetry", "TelemetryServer", "TraceWriter", "read_trace",
+           "total_counts"]

@@ -1,0 +1,133 @@
+"""The HTTP status endpoint: stdlib ``http.server``, zero new deps.
+
+A :class:`TelemetryServer` wraps one :class:`~.registry.Telemetry` and
+serves, on a daemon thread:
+
+* ``GET /``                    — the self-contained live dashboard (HTML);
+* ``GET /metrics``             — full JSON snapshot;
+* ``GET /metrics?format=prom`` — Prometheus text exposition;
+* ``GET /jobs`` / ``GET /nodes`` — the snapshot's job/node sections;
+* ``GET /events?since=N``      — ring events after cursor ``N`` (JSON,
+  with ``next`` = the cursor to pass on the following poll);
+* anything else                — 404; a malformed query (``since=x``) — 400.
+
+Read-only by construction: every route is a snapshot read, no handler
+mutates cluster state, so exposing it beside a live dispatcher is safe.
+``ThreadingHTTPServer`` keeps a slow scraper from blocking the dashboard
+poll; handlers touch only the thread-safe registry.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlsplit
+
+from repro.cluster.telemetry.dashboard import DASHBOARD_HTML
+from repro.cluster.telemetry.registry import Telemetry
+
+__all__ = ["TelemetryServer"]
+
+
+class TelemetryServer:
+    """Serve one registry over HTTP (see module docstring).
+
+    ``port=0`` binds an ephemeral port (tests); the chosen one is in
+    ``.port`` / ``.url`` after construction.  ``close()`` is idempotent
+    and joins the serving thread.
+    """
+
+    def __init__(self, telemetry: Telemetry, *, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.telemetry = telemetry
+        handler = _make_handler(telemetry)
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="telemetry-http",
+            kwargs={"poll_interval": 0.2}, daemon=True,
+        )
+        self._thread.start()
+        self._closed = False
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._httpd.shutdown()
+        self._thread.join(timeout=5.0)
+        self._httpd.server_close()
+
+
+def _make_handler(telemetry: Telemetry) -> type:
+    class Handler(BaseHTTPRequestHandler):
+        # The endpoint must never spam the host process's stderr.
+        def log_message(self, fmt: str, *args) -> None:  # pragma: no cover
+            pass
+
+        def _reply(self, status: int, body: bytes,
+                   content_type: str) -> None:
+            self.send_response(status)
+            self.send_header("Content-Type", content_type)
+            self.send_header("Content-Length", str(len(body)))
+            self.send_header("Cache-Control", "no-store")
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _json(self, obj, status: int = 200) -> None:
+            body = json.dumps(obj, default=str, indent=1).encode("utf-8")
+            self._reply(status, body, "application/json; charset=utf-8")
+
+        def do_GET(self) -> None:  # noqa: N802 (stdlib naming)
+            try:
+                split = urlsplit(self.path)
+                path = split.path.rstrip("/") or "/"
+                query = parse_qs(split.query)
+                if path == "/":
+                    self._reply(200, DASHBOARD_HTML.encode("utf-8"),
+                                "text/html; charset=utf-8")
+                elif path == "/metrics":
+                    fmt = (query.get("format") or ["json"])[0]
+                    if fmt == "prom":
+                        self._reply(
+                            200, telemetry.prometheus().encode("utf-8"),
+                            "text/plain; version=0.0.4; charset=utf-8",
+                        )
+                    elif fmt == "json":
+                        self._json(telemetry.snapshot())
+                    else:
+                        self._json(
+                            {"error": f"unknown format {fmt!r} "
+                                      "(expected json or prom)"},
+                            status=400,
+                        )
+                elif path == "/jobs":
+                    self._json({"jobs": telemetry.snapshot()["jobs"]})
+                elif path == "/nodes":
+                    self._json({"nodes": telemetry.snapshot()["nodes"]})
+                elif path == "/events":
+                    try:
+                        since = int((query.get("since") or ["0"])[0])
+                        limit = int((query.get("limit") or ["500"])[0])
+                    except ValueError:
+                        self._json(
+                            {"error": "since/limit must be integers"},
+                            status=400,
+                        )
+                        return
+                    events = telemetry.events_since(since, limit)
+                    next_cursor = events[-1]["seq"] if events else since
+                    self._json({"events": events, "next": next_cursor})
+                else:
+                    self._json({"error": f"no such route {path!r}"},
+                               status=404)
+            except (BrokenPipeError, ConnectionResetError):
+                pass  # scraper went away mid-reply; nothing to clean up
+
+    return Handler

@@ -396,6 +396,22 @@ class WireCounters:
             "bytes_recv": self.bytes_recv,
         }
 
+    def merge(self, other: "WireCounters | dict") -> None:
+        """Fold another connection's counters into this one (cluster-wide
+        totals for telemetry/timing reports)."""
+        d = other.as_dict() if isinstance(other, WireCounters) else other
+        self.frames_sent += d.get("frames_sent", 0)
+        self.frames_recv += d.get("frames_recv", 0)
+        self.bytes_sent += d.get("bytes_sent", 0)
+        self.bytes_recv += d.get("bytes_recv", 0)
+
+    @classmethod
+    def total(cls, counters: "list[WireCounters]") -> "WireCounters":
+        out = cls()
+        for c in counters:
+            out.merge(c)
+        return out
+
 
 class FrameConnection:
     """A framed, thread-safe view of one TCP socket.

@@ -366,6 +366,15 @@ class ClusterBuilder:
           after.  Remaining ``backend_options`` configure the pool
           (``nodes=``/``workers=`` geometry comes from the spec).
 
+        Observability (``"cluster"`` and ``"service"`` backends): pass
+        ``trace_path="run.jsonl"`` to append every lifecycle event
+        (membership transitions, job submit/done, respawns) as one JSON
+        line, and ``http_port=0`` (ephemeral) or a fixed port to serve the
+        live status endpoint — ``GET /metrics`` (JSON, or Prometheus text
+        with ``?format=prom``), ``/jobs``, ``/nodes``, ``/events?since=N``
+        and an auto-refreshing HTML dashboard at ``/``.  See
+        :mod:`repro.cluster.telemetry` and ARCHITECTURE.md "Observability".
+
         Runtimes are imported lazily to keep core dependency-free.
         """
         pipe = spec.as_pipeline() if hasattr(spec, "as_pipeline") else spec

@@ -157,6 +157,19 @@ class TimingCollector:
     def as_json(self) -> str:
         return json.dumps([n.as_dict() for n in self.nodes], indent=2)
 
+    def summary(self) -> dict:
+        """One JSON-able dict of everything: per-node phases, phase totals,
+        load fraction, and wire counters.  This is what the telemetry
+        endpoint exports as its ``timing`` section."""
+        return {
+            "nodes": {n.node_id: n.as_dict() for n in self.nodes},
+            "total_boot_ms": round(self.total_boot_ms(), 3),
+            "total_load_ms": round(self.total_load_ms(), 3),
+            "total_run_ms": round(self.total_run_ms(), 3),
+            "load_fraction": round(self.load_fraction(), 6),
+            "wire": self.wire,
+        }
+
 
 class _PhaseTimer:
     def __init__(self, collector: TimingCollector, node_id: str, kind: str):
