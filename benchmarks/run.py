@@ -481,6 +481,97 @@ def _append_service_trajectory(record: dict) -> None:
         json.dump(history, fh, indent=2)
 
 
+def chaos_smoke() -> list[str]:
+    """Self-healing under injected faults: the chaos harness against a
+    real subprocess pool.
+
+    Boots a 4-node ClusterService with a fixed FaultPlan — one mid-run
+    ``kill_node`` (node1, progress-triggered) plus one ``straggler``
+    window — a heal budget of 1, and runs the tiny table4 Mandelbrot
+    instance submitted with ``retries=1``.  The pool must detect the
+    death, launch a replacement through the placement path, and still
+    produce the exact threads-backend result; the attempt history and
+    the chaos/heal counters land in results/bench_chaos.json for CI's
+    chaos-smoke gates (results_match, respawns >= 1, attempts present).
+    """
+    _enable_compile_cache()
+    _warm(T4_MAX_ITERS)
+    from repro.cluster.chaos import Fault, FaultPlan, chaos_events
+    from repro.cluster.service import ClusterService
+
+    size_kw = dict(lines=T4_LINES, max_iters=T4_MAX_ITERS)
+    _, expected, _, _app = _run_spec(2, 2, backend="threads", **size_kw)
+    spec = _mandelbrot_spec(4, 1, **size_kw)
+
+    launcher = _bench_launcher()
+    if launcher is None:
+        from repro.cluster.deploy import LocalLauncher
+
+        launcher = LocalLauncher(
+            preload=("repro.kernels.mandelbrot.ops",),
+            compile_cache_dir=os.path.abspath(COMPILE_CACHE),
+        )
+    plan = FaultPlan([
+        Fault("kill_node", node="node1", after_items=1),
+        Fault("straggler", node="node0", at_s=0.5, duration_s=2.0,
+              delay_s=0.05),
+    ])
+    svc = ClusterService(
+        nodes=4, workers=1,
+        launcher=launcher,
+        bind_host=BIND_HOST,
+        register_timeout=120.0,
+        heartbeat_interval=0.25, heartbeat_misses=6,
+        max_heals=1,
+        chaos=plan,
+    )
+    record: dict = {}
+    t0 = time.perf_counter()
+    try:
+        with svc:
+            handle = svc.submit(spec, timeout=600.0, retries=1)
+            result = handle.result(timeout=600.0)
+            # The kill fires on progress but detection rides the heartbeat
+            # deadline — on a fast instance the job can finish first, so
+            # wait for the heal before snapshotting the counters.
+            deadline = time.monotonic() + 60.0
+            while (svc.host_loader.stats.heals < 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            stats = handle.stats()
+            record = {
+                "seconds": round(time.perf_counter() - t0, 4),
+                "results_match": result == expected,
+                "respawns": stats["respawns"],
+                "heals": stats["heals"],
+                "deaths_detected": svc.host_loader.stats.deaths_detected,
+                "redispatched": svc.host_loader.stats.redispatched,
+                "attempts": stats["attempts"],
+                "fired": svc.chaos_controller.fired,
+                "chaos_heal_events": [
+                    {k: e.get(k) for k in ("kind", "node", "fault")}
+                    for e in chaos_events(svc.telemetry.events_since(0))
+                ],
+                "metrics": svc.metrics_snapshot(),
+            }
+    finally:
+        record["orphaned"] = svc.orphaned()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, "bench_chaos.json")
+    with open(out_path, "w") as fh:
+        json.dump({"chaos_smoke": record}, fh, indent=2)
+    return [
+        f"chaos_smoke,{record['seconds'] * 1e6:.0f},"
+        f"results_match={record['results_match']}"
+        f";respawns={record['respawns']}"
+        f";deaths_detected={record['deaths_detected']}"
+        f";faults_injected={len(record['fired'])}",
+        f"chaos_smoke_json,0,"
+        f"written={os.path.relpath(out_path, os.path.dirname(__file__))}",
+    ]
+
+
 def _two_stage_pipeline_spec(lines: int = P2_LINES, width: int = WIDTH,
                              max_iters: int = P2_MAX_ITERS):
     """Mandelbrot rendered per band (stage 1, the compute-heavy hop) whose
@@ -677,6 +768,7 @@ def main() -> None:
         table3_multicore_vs_cluster,
         table4_threads_vs_processes,
         warm_resubmit,
+        chaos_smoke,
         pipeline_two_stage,
         load_time_linearity,
         verification_cost,

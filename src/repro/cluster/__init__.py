@@ -38,11 +38,21 @@ Modules (one per architectural role):
   FIFO-with-priority scheduling);
 * :mod:`repro.cluster.telemetry` — live observability: the event bus +
   metrics registry every host-side component publishes into, the
-  ``GET /metrics`` / dashboard HTTP endpoint, and the JSONL trace writer.
+  ``GET /metrics`` / dashboard HTTP endpoint, and the JSONL trace writer;
+* :mod:`repro.cluster.chaos` — fault injection against the real transport:
+  a declarative :class:`~repro.cluster.chaos.FaultPlan` (kill/drop/delay/
+  duplicate/corrupt/stall-heartbeat/partition/straggler) armed by a
+  :class:`~repro.cluster.chaos.ChaosController`, exercising the heal +
+  retry machinery continuously (``ClusterService(chaos=...)``).
 
 This package must stay importable without jax: the node-loader bootstrap path
 (wire/netchannels/membership/node_loader) imports no accelerator code; user
 work functions pull in whatever they need when the shipped code is loaded.
 """
 
+from repro.cluster.chaos import (  # noqa: F401
+    ChaosController,
+    Fault,
+    FaultPlan,
+)
 from repro.cluster.wire import UT, Frame, FrameType  # noqa: F401

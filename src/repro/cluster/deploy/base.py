@@ -108,6 +108,11 @@ class PlacementPolicy:
     * ``allow_late_join`` — a node registering after the run started is
       given LOAD and answered credits immediately (the per-registration
       LOAD path always supported this; the barrier was what blocked it).
+    * ``max_heals`` — a node that dies *during* a run is relaunched through
+      the same ``_relaunch`` path (mid-run pool healing: dead → launching →
+      registered, warm code re-shipped, credits re-armed), up to this many
+      times cluster-wide.  0 keeps the historical behaviour of shrinking
+      to survivors.
 
     ``respawn_after=None`` spreads the respawn budget evenly across the
     registration window (``register_timeout / (max_respawns + 1)``).
@@ -117,6 +122,7 @@ class PlacementPolicy:
     max_respawns: int = 0
     respawn_after: float | None = None
     allow_late_join: bool = True
+    max_heals: int = 0
 
     def validate(self, nclusters: int) -> None:
         if self.min_nodes is not None and not (
@@ -126,3 +132,5 @@ class PlacementPolicy:
             )
         if self.max_respawns < 0:
             raise ValueError(f"max_respawns must be >= 0, got {self.max_respawns}")
+        if self.max_heals < 0:
+            raise ValueError(f"max_heals must be >= 0, got {self.max_heals}")

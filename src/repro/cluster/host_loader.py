@@ -82,7 +82,12 @@ from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Sequence
 
 from repro.cluster.deploy.base import PlacementPolicy
-from repro.cluster.membership import LAUNCHING, Membership, NodeRecord
+from repro.cluster.membership import (
+    LAUNCHING,
+    REPLACED,
+    Membership,
+    NodeRecord,
+)
 from repro.cluster.telemetry import Telemetry
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
@@ -112,7 +117,8 @@ class HostStats:
     result_batches: int = 0  # RESULT/RESULT_BATCH frames received
     max_batch: int = 0  # largest WORK_BATCH dispatched
     # Placement-policy counters (deployment layer).
-    respawns: int = 0  # silent launches relaunched elsewhere
+    respawns: int = 0  # launches relaunched elsewhere (bootstrap + heals)
+    heals: int = 0  # mid-run deaths answered with a replacement launch
     late_joins: int = 0  # nodes admitted after the run started
     degraded_start: bool = False  # job admitted below full strength
 
@@ -166,6 +172,12 @@ class JobState:
         self.deadline: float | None = None
         self.submitted_at: float | None = None
         self.first_result_at: float | None = None
+        self.ended_at: float | None = None
+        # Failure attribution for the retry history: which node the fatal
+        # error surfaced on (if any) and a coarse cause classification
+        # ("work_function" | "timeout" | "node_loss" | "internal").
+        self.failed_node: str | None = None
+        self.failure_kind: str | None = None
         self.items_collected = 0
         # Warm-load accounting (per job, summed over nodes).
         self.code_shipped = 0
@@ -245,6 +257,7 @@ class HostLoader:
         pool_nodes: int | None = None,
         pool_workers: int = 1,
         telemetry: Telemetry | None = None,
+        conn_wrapper: Callable[[FrameConnection], Any] | None = None,
     ):
         if spec is not None:
             if hasattr(spec, "as_pipeline"):
@@ -275,8 +288,14 @@ class HostLoader:
         self.expected_nodes = list(expected_nodes or [])
         # Deployment-layer callback: relaunch(old_node_id, new_node_id) ->
         # bool, provided by the application so the barrier can respawn a
-        # silent launch without knowing what a launcher is.
+        # silent launch — and the reaper heal a mid-run death — without
+        # knowing what a launcher is.
         self.relaunch = relaunch
+        self._heals_used = 0
+        # Chaos hook: every accepted connection is passed through this
+        # wrapper (identity when None) before its reader thread starts, so
+        # a fault layer sees every frame of every node.
+        self.conn_wrapper = conn_wrapper
         self.job_timeout = job_timeout
         self.slowdown = dict(slowdown or {})
         self.artifacts = dict(artifacts or {})
@@ -392,6 +411,8 @@ class HostLoader:
             except OSError:
                 return
             conn = FrameConnection(sock)
+            if self.conn_wrapper is not None:
+                conn = self.conn_wrapper(conn)
             t = threading.Thread(
                 target=self._conn_reader, args=(conn, f"{addr[0]}:{addr[1]}"),
                 name=f"hnl-reader-{addr[1]}", daemon=True,
@@ -561,7 +582,15 @@ class HostLoader:
                 # with UT.  Exactly-once is untouched: result-id dedup
                 # never depended on when a node joined.
                 _, node_id, addr, conn, payload = event
-                if not self.placement.allow_late_join:
+                # An *expected* arrival — an announced launch (a degraded
+                # start's straggler, a bootstrap respawn, a mid-run heal)
+                # registering late — is admitted even when elastic late
+                # join is disabled: the policy gates strangers, not
+                # capacity the host itself asked for.
+                prior = self.membership.nodes.get(node_id)
+                expected = (prior is not None
+                            and prior.state in (LAUNCHING, REPLACED))
+                if not expected and not self.placement.allow_late_join:
                     conn.close()
                     continue
                 try:
@@ -575,7 +604,8 @@ class HostLoader:
                     conn.close()  # duplicate of a live member
                     continue
                 self.stats.late_joins += 1
-                self.telemetry.emit("late_join", node=node_id, address=addr)
+                self.telemetry.emit("late_join", node=node_id, address=addr,
+                                    expected=expected)
                 if self._primary is not None:
                     self._send_load(rec, self._primary)
                 else:
@@ -674,19 +704,74 @@ class HostLoader:
     def _reap(self, now: float | None = None) -> None:
         newly_dead = self.membership.reap(now, at_item=self._items_collected())
         for rec in newly_dead:
-            self.stats.deaths_detected += 1
-            for job in self._jobs.values():
-                if not job.active:
-                    continue
-                for s in range(job.S):
-                    lost = [iid for iid, (nid, _) in job.inflight[s].items()
-                            if nid == rec.node_id]
-                    for iid in lost:
-                        _, obj = job.inflight[s].pop(iid)
-                        job.pending[s].append((iid, obj))
-                        self.stats.redispatched += 1
+            self._on_node_death(rec)
         if newly_dead:
             self._flush_waiting()
+
+    def _on_node_death(self, rec: NodeRecord) -> None:
+        """One detected mid-run death: surface it on the bus with its
+        detection metadata, requeue the node's in-flight items, and — if
+        the policy grants a heal — relaunch a replacement."""
+        self.stats.deaths_detected += 1
+        ev = rec.last_failure
+        self.telemetry.inc("failures_detected")
+        self.telemetry.emit(
+            "failure",
+            failure=ev.kind if ev else "node_loss",
+            node=rec.node_id,
+            node_index=rec.index,
+            detect_latency_ms=(round(ev.detect_latency_s * 1e3, 3)
+                               if ev else None),
+            at_item=ev.step if ev else None,
+        )
+        for job in self._jobs.values():
+            if not job.active:
+                continue
+            for s in range(job.S):
+                lost = [iid for iid, (nid, _) in job.inflight[s].items()
+                        if nid == rec.node_id]
+                for iid in lost:
+                    _, obj = job.inflight[s].pop(iid)
+                    job.pending[s].append((iid, obj))
+                    self.stats.redispatched += 1
+        self._heal(rec)
+
+    def _heal(self, rec: NodeRecord) -> bool:
+        """Mid-run pool healing: answer a death with a fresh launch through
+        the same ``relaunch`` path the bootstrap respawn uses.
+
+        The replacement is announced (LAUNCHING) and registers through the
+        dispatcher like any expected straggler — LOAD (warm code cache
+        re-shipped), credits armed by its first WORK_REQUEST — completing
+        the dead → launching → registered transition chain.  Budgeted by
+        ``PlacementPolicy.max_heals`` (0 = historical shrink-to-survivors).
+        """
+        if (self.relaunch is None or self._stop.is_set()
+                or self._heals_used >= self.placement.max_heals):
+            return False
+        attempts = rec.attempts + 1
+        new_id = f"{rec.node_id}r{attempts}"
+        while new_id in self.membership.nodes:  # bootstrap respawn took it
+            attempts += 1
+            new_id = f"{rec.node_id}r{attempts}"
+        try:
+            ok = self.relaunch(rec.node_id, new_id)
+        except Exception:
+            ok = False
+        if not ok:
+            self.telemetry.emit("heal_failed", node=rec.node_id,
+                                replacement=new_id)
+            return False
+        nrec = self.membership.expect(new_id)
+        nrec.attempts = attempts
+        self._heals_used += 1
+        self.stats.heals += 1
+        self.stats.respawns += 1
+        self.telemetry.inc("heals")
+        self.telemetry.emit("heal", node=rec.node_id, replacement=new_id,
+                            heals_used=self._heals_used,
+                            heals_budget=self.placement.max_heals)
+        return True
 
     def _collect_results(self, node_id: str, job_id: int, results: list,
                          credits: int) -> None:
@@ -705,7 +790,7 @@ class HostLoader:
                     f"work function raised on {node_id} for item "
                     f"{p['id']}: {p['error']}\n"
                     f"{p.get('traceback', '')}"
-                ))
+                ), node=node_id)
                 break
             # Always clear inflight — a redispatched item can complete
             # twice (zombie result + survivor result) and both entries
@@ -751,35 +836,61 @@ class HostLoader:
         if not job.stage_done(job.S - 1):
             return
         job.result = job.r_details.finalise(job.acc)
-        job.done.set()
+        job.ended_at = time.monotonic()
         self.telemetry.inc("jobs_completed")
         elapsed_ms = None
         if job.submitted_at is not None:
-            elapsed_ms = round((time.monotonic() - job.submitted_at) * 1e3, 3)
+            elapsed_ms = round((job.ended_at - job.submitted_at) * 1e3, 3)
         self.telemetry.emit("job_done", job=job.job_id,
                             items=job.items_collected, elapsed_ms=elapsed_ms)
         self._publish_job(job)
+        # Publish the terminal gauges *before* releasing waiters: a caller
+        # snapshotting /metrics the instant result() returns must already
+        # see done=True.
+        job.done.set()
         if not job.pinned:
             self._send_job_close(job)
 
-    def _fail_job(self, job: JobState, exc: BaseException) -> None:
+    def _fail_job(self, job: JobState, exc: BaseException, *,
+                  node: str | None = None, kind: str | None = None) -> None:
         if job.done.is_set():
             return
         job.error = exc
-        job.done.set()
+        job.ended_at = time.monotonic()
+        if node is not None:
+            job.failed_node = node
+        if kind is None:
+            if isinstance(exc, WorkFunctionError):
+                kind = "work_function"
+            elif isinstance(exc, TimeoutError):
+                kind = "timeout"
+            else:
+                kind = "internal"
+        job.failure_kind = kind
         self.telemetry.inc("jobs_failed")
-        self.telemetry.emit("job_failed", job=job.job_id, error=str(exc))
+        self.telemetry.emit("job_failed", job=job.job_id, error=str(exc),
+                            cause=kind, node=job.failed_node)
         self._publish_job(job)
-        if not job.pinned:
-            self._send_job_close(job)
+        # As in _maybe_finish: gauges first, then release waiters.
+        job.done.set()
+        # Aborted/timed-out jobs must tear down on *every* error path —
+        # pinned included — or nodes keep stale bindings (and keep
+        # computing a window of items for a job nobody will collect).
+        self._send_job_close(job)
 
     def _send_job_close(self, job: JobState) -> None:
         """Per-job teardown: nodes drop the job's bindings (warm code cache
-        entries survive) and their credits stay pooled for the next job."""
+        entries survive) and their credits stay pooled for the next job.
+
+        Sent to *every* live node, not just those that acked the job's
+        LOAD: a node whose LOAD is still in flight when the job dies would
+        otherwise bind a dead job and hold it forever (the close for an
+        unknown job is a no-op node-side, so over-sending is harmless).
+        """
         for rec in self.membership.nodes.values():
-            if not rec.alive or job.job_id not in rec.jobs_loaded:
-                continue
             rec.jobs_loaded.discard(job.job_id)
+            if not rec.alive or rec.conn is None:
+                continue
             try:
                 rec.conn.send(Frame(FrameType.JOB_CLOSE,
                                     {"job_id": job.job_id},
@@ -1054,12 +1165,25 @@ class HostLoader:
         if ok:
             if rec is not None and rec.alive:  # never resurrect a reaped node
                 self.membership.mark_loaded(node_id)
-                rec.jobs_loaded.add(job_id)
+                job = self._jobs.get(job_id)
+                if job is not None and not job.active:
+                    # The job ended while its LOAD was in flight: close it
+                    # on this node immediately instead of binding a corpse.
+                    try:
+                        rec.conn.send(Frame(FrameType.JOB_CLOSE,
+                                            {"job_id": job_id},
+                                            APP_WIRE_CHANNEL, job_id=job_id))
+                    except (OSError, ValueError):
+                        pass
+                else:
+                    rec.jobs_loaded.add(job_id)
             return
         # Died between REGISTER and LOAD: a bootstrap-time node loss,
-        # handled like any other — survivors run the job.
+        # handled like any other — requeue + surface + (policy permitting)
+        # heal, exactly as a heartbeat-detected death.
         if self.membership.mark_dead(node_id) is not None:
-            self.stats.deaths_detected += 1
+            self._on_node_death(rec)
+            self._flush_waiting()
 
     def _node_finished(self, node_id: str, payload: Any) -> None:
         timing = payload or {}
@@ -1069,6 +1193,24 @@ class HostLoader:
         self.timing.add(node_id, "run", float(timing.get("run_ms", 0.0)))
         self.telemetry.emit("node_done", node=node_id,
                             items=int(timing.get("items", 0)))
+        # A node retiring with jobs still active (it hit a decode error, or
+        # its host-side channel died under it) will never deliver results
+        # for its in-flight items — requeue them exactly as a death does,
+        # or the job stalls to its deadline.
+        requeued = False
+        for job in self._jobs.values():
+            if not job.active:
+                continue
+            for s in range(job.S):
+                lost = [iid for iid, (nid, _) in job.inflight[s].items()
+                        if nid == node_id]
+                for iid in lost:
+                    _, obj = job.inflight[s].pop(iid)
+                    job.pending[s].append((iid, obj))
+                    self.stats.redispatched += 1
+                    requeued = True
+        if requeued:
+            self._flush_waiting()
 
     def _collect_wire_stats(self) -> None:
         """Fold per-connection traffic counters + protocol counters into the
@@ -1112,7 +1254,9 @@ class HostLoader:
             forwarded=job.forwarded,
             code_shipped=job.code_shipped,
             code_cached=job.code_cached,
-            done=job.done.is_set(),
+            # ended_at, not the event: terminal publishes happen just
+            # before done.set() releases waiters (see _maybe_finish).
+            done=job.ended_at is not None,
             error=None if job.error is None else str(job.error),
         )
 

@@ -74,6 +74,9 @@ class NodeRecord:
     # *when* a node registered/died/was replaced, not just that it did.
     state_changed_at: float = 0.0
     transitions: list = field(default_factory=list)
+    # The FailureEvent recorded when this node was declared dead (None
+    # while alive) — the heal path reads its detection metadata.
+    last_failure: Any = None
 
     @property
     def alive(self) -> bool:
@@ -181,14 +184,21 @@ class Membership:
         if timing:
             rec.timing = dict(timing)
 
-    def mark_dead(self, node_id: str, *, at_item: int = 0) -> FailureEvent | None:
+    def mark_dead(self, node_id: str, *, at_item: int = 0,
+                  now: float | None = None) -> FailureEvent | None:
         rec = self.nodes.get(node_id)
         if rec is None or rec.state == DEAD:
             return None
-        self._transition(rec, DEAD)
+        now = time.monotonic() if now is None else now
+        self._transition(rec, DEAD, now)
         rec.credits = 0  # a dead node's parked demand can never be answered
-        ev = FailureEvent(step=at_item, kind="node_loss", node=rec.index)
+        # Detection latency: silence observed before we declared death —
+        # bounded below by the monitor deadline when beats ever arrived.
+        latency = max(0.0, now - rec.last_beat) if rec.last_beat else 0.0
+        ev = FailureEvent(step=at_item, kind="node_loss", node=rec.index,
+                          node_id=node_id, detect_latency_s=latency)
         self.failures.append(ev)
+        rec.last_failure = ev
         return ev
 
     # -- liveness -----------------------------------------------------------
@@ -200,7 +210,7 @@ class Membership:
         newly_dead = []
         for rec in self.nodes.values():
             if rec.alive and self.monitor.is_dead(rec.last_beat, now):
-                self.mark_dead(rec.node_id, at_item=at_item)
+                self.mark_dead(rec.node_id, at_item=at_item, now=now)
                 newly_dead.append(rec)
         return newly_dead
 

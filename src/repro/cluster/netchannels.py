@@ -11,6 +11,14 @@ too — only the transport changed.
 A :class:`ChannelMux` owns one :class:`~repro.cluster.wire.FrameConnection`
 and a reader thread that routes incoming frames to per-channel inboxes; a
 :class:`NetChannelEnd` is one (wire channel, frame type) view of the mux.
+
+Fault injection: the mux only needs ``send``/``recv``/``close``/``peer``
+from its connection, so a :class:`~repro.cluster.chaos.FaultyConnection`
+(the chaos layer's drop/delay/duplicate/corrupt wrapper) slots in wherever
+a bare ``FrameConnection`` does.  Either way a dead transport surfaces as
+:class:`ChannelClosed` on *both* operations — a blocked ``get`` and a
+``put`` into a severed socket raise the same typed error, so runtime code
+has one failure vocabulary for the read and write sides.
 """
 
 from __future__ import annotations
@@ -26,6 +34,8 @@ from repro.cluster.wire import (
     FrameConnection,
     FrameType,
 )
+
+__all__ = ["ChannelClosed", "ChannelMux", "NetChannelEnd"]
 
 
 class ChannelClosed(ConnectionError):
@@ -48,11 +58,22 @@ class NetChannelEnd:
     # The queue.Queue surface used by runtime.local -------------------------
 
     def put(self, obj: Any) -> None:
-        """Write ``obj`` to the remote end (UT is sent as a typed frame)."""
-        if obj is UT:
-            self._mux.send(Frame(FrameType.UT, None, self._wire_channel))
-            return
-        self._mux.send(Frame(self._ftype, obj, self._wire_channel))
+        """Write ``obj`` to the remote end (UT is sent as a typed frame).
+
+        A dead socket raises :class:`ChannelClosed`, mirroring ``get`` —
+        the writer learns its peer is gone as a typed channel error, not a
+        raw OSError that depends on which syscall happened to fail.
+        """
+        frame = (Frame(FrameType.UT, None, self._wire_channel) if obj is UT
+                 else Frame(self._ftype, obj, self._wire_channel))
+        try:
+            self._mux.send(frame)
+        except ChannelClosed:
+            raise
+        except (ConnectionError, OSError) as exc:
+            raise ChannelClosed(
+                f"peer {self._mux.conn.peer} closed while sending"
+            ) from exc
 
     def get(self, timeout: float | None = None) -> Any:
         obj = self._inbox.get(timeout=timeout)

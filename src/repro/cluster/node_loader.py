@@ -57,6 +57,7 @@ import collections
 import importlib
 import os
 import queue
+import random
 import socket
 import threading
 import time
@@ -80,19 +81,29 @@ from repro.cluster.wire import (
 ARTIFACTS: dict[str, bytes] = {}
 
 
-def connect_with_retry(host: str, port: int,
-                       timeout: float = 30.0) -> socket.socket:
+def connect_with_retry(host: str, port: int, timeout: float = 30.0, *,
+                       max_delay: float = 2.0, jitter: float = 0.5,
+                       _sleep: Callable[[float], None] = time.sleep,
+                       _rng: Any = None) -> socket.socket:
     """Dial the host, retrying with exponential backoff until ``timeout``.
 
     On a real network the start order is uncontrolled: an ssh-launched
     node-loader routinely comes up before the host binds its load port (or
     while the host is still syncing code to other machines).  Dying on the
     first ECONNREFUSED would turn every such race into a lost workstation;
-    instead the node keeps dialling — 0.2s, 0.4s, ... capped at 2s between
-    attempts — and only gives up once the whole window is spent.
+    instead the node keeps dialling — 0.2s, 0.4s, ... capped at
+    ``max_delay`` between attempts — and only gives up once the whole
+    window is spent.
+
+    Each pause is scaled by a uniform draw from ``[1 - jitter, 1]`` so a
+    mass (re)spawn — every node of a healed or freshly fanned-out pool
+    dialling the same listener — decorrelates instead of hammering the
+    accept queue in lockstep (the thundering herd).  ``_sleep``/``_rng``
+    are test seams.
     """
     deadline = time.monotonic() + timeout
     delay = 0.2
+    rng = random if _rng is None else _rng
     while True:
         remaining = deadline - time.monotonic()
         try:
@@ -106,8 +117,11 @@ def connect_with_retry(host: str, port: int,
                     f"could not reach host-node-loader at {host}:{port} "
                     f"within {timeout}s: {exc}"
                 ) from exc
-            time.sleep(min(delay, remaining))
-            delay = min(delay * 2, 2.0)
+            pause = min(delay, remaining)
+            if jitter > 0:
+                pause *= rng.uniform(max(0.0, 1.0 - jitter), 1.0)
+            _sleep(pause)
+            delay = min(delay * 2, max_delay)
 
 
 def run_node(

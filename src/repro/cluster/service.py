@@ -36,6 +36,7 @@ pool that outlives the application.
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 from typing import Any, Sequence
@@ -50,7 +51,15 @@ __all__ = ["ClusterService", "JobHandle", "ServiceClusterApplication"]
 
 
 class JobHandle:
-    """A submitted job's future: wait on it, read its result and timings."""
+    """A submitted job's future: wait on it, read its result and timings.
+
+    When the submission carried a retry policy (``submit(..., retries=N)``),
+    the handle spans *all* attempts: ``done()``/``wait()``/``result()``
+    resolve only once the supervisor declares the job final (succeeded, or
+    out of retries — the poisoned-job guard), and ``attempts`` /
+    ``stats()["attempts"]`` record each attempt's outcome, failure cause,
+    implicated node and timing.
+    """
 
     def __init__(self, job: JobState, cluster_boot_ms: float,
                  host_loader: HostLoader | None = None):
@@ -59,19 +68,28 @@ class JobHandle:
         #: What this submission paid for cluster boot: the pool's boot time
         #: on the submission that triggered it, ``0.0`` on every warm one.
         self.cluster_boot_ms = cluster_boot_ms
+        #: One record per finished attempt (retry submissions only fill
+        #: more than one): attempt #, job_id, error, cause, node, timings.
+        self.attempts: list[dict[str, Any]] = []
+        # Retry mode: the supervisor sets this once no further attempt
+        # will run; without retries the job's own event is the signal.
+        self._final: threading.Event | None = None
 
     @property
     def job_id(self) -> int:
         return self._job.job_id
 
+    def _event(self) -> threading.Event:
+        return self._final if self._final is not None else self._job.done
+
     def done(self) -> bool:
-        return self._job.done.is_set()
+        return self._event().is_set()
 
     def wait(self, timeout: float | None = None) -> bool:
-        return self._job.done.wait(timeout)
+        return self._event().wait(timeout)
 
     def result(self, timeout: float | None = None) -> Any:
-        if not self._job.done.wait(timeout):
+        if not self._event().wait(timeout):
             raise TimeoutError(
                 f"job {self._job.job_id} not finished within {timeout}s"
             )
@@ -110,7 +128,13 @@ class JobHandle:
                 rec = self._host_loader.membership.nodes.get(nid)
                 if rec is not None and rec.conn is not None:
                     d["wire"] = rec.conn.counters.as_dict()
-        return {
+        # The attempt history always shows at least the current attempt,
+        # even mid-flight or without a retry policy, so consumers need not
+        # special-case the no-retry path.
+        attempts = list(self.attempts)
+        if not attempts or attempts[-1]["job_id"] != self._job.job_id:
+            attempts.append(_attempt_record(self._job, len(attempts) + 1))
+        stats = {
             "job_id": self._job.job_id,
             "priority": self._job.priority,
             "items_collected": self._job.items_collected,
@@ -123,7 +147,33 @@ class JobHandle:
             "cluster_boot_ms": self.cluster_boot_ms,
             "submit_to_first_result_ms": self.submit_to_first_result_ms,
             "nodes": nodes,
+            "attempts": attempts,
+            "retries": max(0, len(attempts) - 1),
         }
+        if self._host_loader is not None:
+            # Pool-level healing the job rode through (cluster-wide
+            # counters: the pool, not this job alone, was healed).
+            stats["respawns"] = self._host_loader.stats.respawns
+            stats["heals"] = self._host_loader.stats.heals
+        return stats
+
+
+def _attempt_record(job: JobState, attempt: int) -> dict[str, Any]:
+    elapsed_ms = None
+    if job.submitted_at is not None and job.ended_at is not None:
+        elapsed_ms = round((job.ended_at - job.submitted_at) * 1e3, 3)
+    return {
+        "attempt": attempt,
+        "job_id": job.job_id,
+        "done": job.done.is_set(),
+        "error": None if job.error is None else str(job.error),
+        "error_type": (None if job.error is None
+                       else type(job.error).__name__),
+        "cause": job.failure_kind,
+        "node": job.failed_node,
+        "items_collected": job.items_collected,
+        "elapsed_ms": elapsed_ms,
+    }
 
 
 class ClusterService:
@@ -154,6 +204,8 @@ class ClusterService:
         max_respawns: int = 0,
         respawn_after: float | None = None,
         allow_late_join: bool = True,
+        max_heals: int = 0,
+        chaos: Any = None,
         shutdown_grace: float = 10.0,
         timing: TimingCollector | None = None,
         telemetry: Telemetry | None = None,
@@ -183,6 +235,14 @@ class ClusterService:
         self.max_respawns = max_respawns
         self.respawn_after = respawn_after
         self.allow_late_join = allow_late_join
+        # Mid-run healing budget: a node dying while jobs run is answered
+        # with a replacement launch (0 = shrink to survivors, the
+        # historical behaviour).
+        self.max_heals = max_heals
+        # Optional fault injection: a repro.cluster.chaos.FaultPlan armed
+        # against this pool once it is ready (tests, chaos-smoke CI).
+        self.chaos = chaos
+        self.chaos_controller: Any = None
         self.shutdown_grace = shutdown_grace
         self.timing = timing or TimingCollector()
         # Observability: one bus for the pool's whole life.  ``http_port``
@@ -233,6 +293,19 @@ class ClusterService:
 
                 self.launcher = LocalLauncher(preload=self.preload)
         node_ids = [f"node{i}" for i in range(self.nodes)]
+        conn_wrapper = None
+        if self.chaos is not None and self.chaos_controller is None:
+            from repro.cluster.chaos import ChaosController
+
+            self.chaos_controller = ChaosController(
+                self.chaos,
+                kill=self._chaos_kill,
+                telemetry=self.telemetry,
+                items_fn=self._chaos_items,
+            )
+            self.telemetry.set_sampler("chaos", self.chaos_controller.sample)
+        if self.chaos_controller is not None:
+            conn_wrapper = self.chaos_controller.wrap_connection
         self.host_loader = HostLoader(
             None,
             self.timing,
@@ -252,12 +325,14 @@ class ClusterService:
                 max_respawns=self.max_respawns,
                 respawn_after=self.respawn_after,
                 allow_late_join=self.allow_late_join,
+                max_heals=self.max_heals,
             ),
             expected_nodes=node_ids,
             relaunch=self._relaunch,
             pool_nodes=self.nodes,
             pool_workers=self.workers,
             telemetry=self.telemetry,
+            conn_wrapper=conn_wrapper,
         )
         # The endpoint comes up before the barrier so an operator can watch
         # LAUNCHING -> REGISTERED -> LOADED roll in live.
@@ -279,6 +354,21 @@ class ClusterService:
         self.host_loader.pool_ready.wait()
         if self.host_loader.serve_error is not None:
             raise self.host_loader.serve_error
+        # Arm chaos only against the *running* pool — faults during the
+        # bootstrap barrier would test the launcher, not the protocol.
+        if self.chaos_controller is not None:
+            self.chaos_controller.arm()
+
+    def _chaos_kill(self, node_id: str) -> bool:
+        handle = self.handles.get(node_id)
+        if handle is None:
+            return False
+        handle.kill()
+        return True
+
+    def _chaos_items(self) -> int:
+        hl = self.host_loader
+        return hl.stats.items_total if hl is not None else 0
 
     def _relaunch(self, old_node_id: str, new_node_id: str) -> bool:
         old = self.handles.get(old_node_id)
@@ -299,13 +389,27 @@ class ClusterService:
     # -- jobs ---------------------------------------------------------------
 
     def submit(self, spec, *, priority: int = 0,
-               timeout: float | None = None) -> JobHandle:
+               timeout: float | None = None, retries: int = 0,
+               backoff: float = 0.5, max_backoff: float = 30.0) -> JobHandle:
         """Submit one pipeline; returns immediately with its future.
 
         The first submission is charged the pool's boot time in its
         ``cluster_boot_ms`` (booting lazily if ``start()`` was never
         called); every later one reports ``0.0`` — it ran warm.
+
+        ``retries`` arms a per-job retry policy: a failed attempt is
+        resubmitted up to that many times with exponential backoff
+        (``backoff * 2**(attempt-1)``, capped at ``max_backoff``, with
+        ±50% jitter so a burst of failed jobs doesn't resubmit in
+        lockstep).  The handle resolves once an attempt succeeds or the
+        budget is spent (the poisoned-job guard: a deterministically
+        failing work function stops, with the full history on
+        ``handle.attempts``).  Each attempt gets its own ``timeout``.
         """
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        if backoff < 0 or max_backoff < 0:
+            raise ValueError("backoff and max_backoff must be >= 0")
         self.start()
         if self._stop.is_set() or self._closed:
             raise RuntimeError("cluster service is closed")
@@ -314,8 +418,57 @@ class ClusterService:
         with self._lock:
             boot = 0.0 if self._boot_charged else (self.boot_ms or 0.0)
             self._boot_charged = True
-        return JobHandle(job, cluster_boot_ms=boot,
-                         host_loader=self.host_loader)
+        handle = JobHandle(job, cluster_boot_ms=boot,
+                           host_loader=self.host_loader)
+        if retries > 0:
+            handle._final = threading.Event()
+            t = threading.Thread(
+                target=self._supervise_retries,
+                args=(handle, spec, priority, timeout, retries, backoff,
+                      max_backoff),
+                name=f"job-retry-{job.job_id}", daemon=True,
+            )
+            t.start()
+        return handle
+
+    def _supervise_retries(self, handle: JobHandle, spec, priority: int,
+                           timeout: float | None, retries: int,
+                           backoff: float, max_backoff: float) -> None:
+        """Per-job retry loop (its own daemon thread; the dispatcher never
+        blocks on a backoff).  Records every attempt on the handle and in
+        the telemetry job gauges, resubmits failed attempts until the
+        budget is spent, then declares the handle final."""
+        rng = random.Random(handle._job.job_id)
+        attempt = 1
+        while True:
+            job = handle._job
+            job.done.wait()
+            record = _attempt_record(job, attempt)
+            handle.attempts.append(record)
+            self.telemetry.set_job(job.job_id,
+                                   attempts=list(handle.attempts),
+                                   retries=attempt - 1)
+            if (job.error is None or attempt > retries
+                    or self._stop.is_set() or self._closed):
+                break
+            delay = min(max_backoff, backoff * (2 ** (attempt - 1)))
+            delay *= rng.uniform(0.5, 1.5)
+            record["backoff_ms"] = round(delay * 1e3, 3)
+            self.telemetry.inc("job_retries")
+            self.telemetry.emit("job_retry", job=job.job_id,
+                                attempt=attempt, cause=record["cause"],
+                                node=record["node"],
+                                backoff_ms=record["backoff_ms"])
+            if self._stop.wait(delay):
+                break
+            attempt += 1
+            try:
+                new_job = self.host_loader.submit_job(
+                    spec, priority=priority, timeout=timeout)
+            except Exception:
+                break  # service torn down under us: the last error stands
+            handle._job = new_job
+        handle._final.set()
 
     def run(self, spec, *, priority: int = 0,
             timeout: float | None = None) -> Any:
@@ -351,6 +504,9 @@ class ClusterService:
         self._teardown()
 
     def _teardown(self) -> None:
+        # Chaos first: no new faults may fire into a pool being dismantled.
+        if self.chaos_controller is not None:
+            self.chaos_controller.disarm()
         if self.host_loader is not None:
             # Polite first: UT lets nodes flush + return timings and exit 0.
             self.host_loader.shutdown_nodes()

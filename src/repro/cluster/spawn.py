@@ -90,6 +90,14 @@ class ProcessClusterApplication:
     max_respawns: int = 0
     respawn_after: float | None = None
     allow_late_join: bool = True
+    # Mid-run healing budget: relaunch nodes that die *during* the run
+    # (0 = shrink to survivors) — see PlacementPolicy.max_heals.
+    max_heals: int = 0
+    # Optional fault injection: a repro.cluster.chaos.FaultPlan armed when
+    # the launches fan out (one-shot runs test the full bootstrap+run
+    # window, unlike the service which arms after pool-ready).
+    chaos: Any = None
+    chaos_controller: Any = None
     # -- observability ------------------------------------------------------
     # ``http_port``: None = no status endpoint, 0 = ephemeral (read
     # ``http_url`` after start).  ``trace_path`` appends the run's lifecycle
@@ -161,6 +169,20 @@ class ProcessClusterApplication:
         node_ids = self.node_ids()
         if self.telemetry is None:
             self.telemetry = Telemetry(trace_path=self.trace_path)
+        conn_wrapper = None
+        if self.chaos is not None and self.chaos_controller is None:
+            from repro.cluster.chaos import ChaosController
+
+            self.chaos_controller = ChaosController(
+                self.chaos,
+                kill=self.kill_node,
+                telemetry=self.telemetry,
+                items_fn=lambda: (self.host_loader.stats.items_total
+                                  if self.host_loader is not None else 0),
+            )
+            self.telemetry.set_sampler("chaos", self.chaos_controller.sample)
+        if self.chaos_controller is not None:
+            conn_wrapper = self.chaos_controller.wrap_connection
         self.host_loader = HostLoader(
             self.spec,
             self.timing,
@@ -182,10 +204,12 @@ class ProcessClusterApplication:
                 max_respawns=self.max_respawns,
                 respawn_after=self.respawn_after,
                 allow_late_join=self.allow_late_join,
+                max_heals=self.max_heals,
             ),
             expected_nodes=node_ids,
             relaunch=self._relaunch,
             telemetry=self.telemetry,
+            conn_wrapper=conn_wrapper,
         )
         if self.http_port is not None and self.http_server is None:
             self.http_server = TelemetryServer(
@@ -198,6 +222,8 @@ class ProcessClusterApplication:
         self.launcher.prepare(self.bind_host, self.host_loader.port)
         for node_id in node_ids:
             self.handles[node_id] = self.launcher.launch(node_id)
+        if self.chaos_controller is not None:
+            self.chaos_controller.arm()
 
     def _relaunch(self, old_node_id: str, new_node_id: str) -> bool:
         """Placement-policy callback: a launch never registered — retire it
@@ -252,6 +278,9 @@ class ProcessClusterApplication:
     # -- teardown -----------------------------------------------------------
 
     def _shutdown(self) -> None:
+        # Chaos first: no new faults may fire into a cluster being torn down.
+        if self.chaos_controller is not None:
+            self.chaos_controller.disarm()
         # Close the host's sockets first: surviving node-loaders blocked on
         # the application channel see ChannelClosed and exit promptly
         # (milliseconds, exit 0) instead of burning the grace period.

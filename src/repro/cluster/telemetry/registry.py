@@ -143,9 +143,12 @@ class Telemetry:
             if len(self._ring) == self._ring.maxlen:
                 self._dropped += 1
             self._ring.append(event)
-            trace = self.trace
-        if trace is not None:
-            trace.write(event)
+            # The trace write stays under the bus lock so the JSONL file is
+            # seq-ordered: concurrent emitters would otherwise race between
+            # taking a seq and appending their line.  Events are per state
+            # change, not per item, so the line-buffered write is cheap.
+            if self.trace is not None:
+                self.trace.write(event)
         return event
 
     def events_since(self, since: int = 0, limit: int = 500) -> list[dict]:
@@ -175,9 +178,10 @@ class Telemetry:
             self._counters[name] = self._counters.get(name, 0) + n
 
     def set_sampler(self, name: str, fn: Callable[[], dict]) -> None:
-        """Register a pull-side sampler (``"nodes"``, ``"cluster"`` or
-        ``"timing"``) — invoked on every snapshot, on the reader's thread."""
-        if name not in ("nodes", "cluster", "timing"):
+        """Register a pull-side sampler (``"nodes"``, ``"cluster"``,
+        ``"timing"`` or ``"chaos"``) — invoked on every snapshot, on the
+        reader's thread."""
+        if name not in ("nodes", "cluster", "timing", "chaos"):
             raise ValueError(f"unknown sampler section {name!r}")
         self._samplers[name] = fn
 
@@ -203,6 +207,7 @@ class Telemetry:
         sampled_nodes = self._sample("nodes")
         sampled_cluster = self._sample("cluster")
         timing = self._sample("timing")
+        chaos = self._sample("chaos")
         now = self._clock()
         with self._lock:
             jobs = {str(jid): dict(g) for jid, g in self._jobs.items()}
@@ -230,6 +235,8 @@ class Telemetry:
         }
         if timing:
             snap["timing"] = timing
+        if chaos:
+            snap["chaos"] = chaos
         return snap
 
     def prometheus(self) -> str:
@@ -239,6 +246,8 @@ class Telemetry:
 
         * ``repro_uptime_seconds``
         * ``repro_cluster_<counter>`` — cluster section, numeric entries;
+        * ``repro_chaos_<field>`` — fault-injection section numerics
+          (present only when a chaos controller is armed);
         * ``repro_job_<gauge>{job="1"}`` — per-job numerics; per-stage
           list gauges add a ``stage`` label per element;
         * ``repro_node_<field>{node="node0"}`` — per-node numerics, with
@@ -264,6 +273,8 @@ class Telemetry:
         sample("repro_uptime_seconds", {}, snap["uptime_s"])
         for key, val in snap["cluster"].items():
             sample(f"repro_cluster_{key}", {}, val)
+        for key, val in (snap.get("chaos") or {}).items():
+            sample(f"repro_chaos_{key}", {}, val)  # numerics only
         for jid, gauges in snap["jobs"].items():
             for key, val in gauges.items():
                 if isinstance(val, (list, tuple)):

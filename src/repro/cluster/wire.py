@@ -448,6 +448,15 @@ class FrameConnection:
 
     def send(self, frame: Frame) -> None:
         bufs = pack_frame_buffers(frame)
+        self.send_raw(bufs)
+
+    def send_raw(self, bufs: list) -> None:
+        """Send pre-packed frame buffers (``[header, *payload]``) verbatim.
+
+        Lets callers that need byte-level control over the wire image —
+        the chaos layer's payload-corruption fault — reuse the locked
+        scatter-gather path instead of poking at the socket directly.
+        """
         total = _buffers_len(bufs)
         with self._send_lock:
             self._send_buffers(bufs, total)

@@ -352,6 +352,12 @@ class ClusterBuilder:
           degraded start with survivors, ``max_respawns=`` relaunches a
           node that never registers elsewhere, and late joiners are
           shipped LOAD + credits mid-run (``allow_late_join``).
+          Robustness knobs: ``max_heals=`` budgets mid-run pool healing
+          (a node dying *during* the run is relaunched, warm code
+          re-shipped) and ``chaos=`` arms a
+          :class:`repro.cluster.chaos.FaultPlan` of injected faults
+          (kill/drop/delay/duplicate/corrupt/stall-heartbeat/partition/
+          straggler) against the live transport.
           One transport caveat: ndarray payloads cross the wire on a
           zero-copy codec and arrive as *read-only* views — a work
           function that mutates its input in place must ``np.copy`` it
@@ -364,7 +370,10 @@ class ClusterBuilder:
           become warm resubmits: no boot, no code shipped); without it an
           ephemeral pool sized from the spec boots for this run and closes
           after.  Remaining ``backend_options`` configure the pool
-          (``nodes=``/``workers=`` geometry comes from the spec).
+          (``nodes=``/``workers=`` geometry comes from the spec) —
+          including the same ``max_heals=`` / ``chaos=`` robustness
+          knobs; the service additionally retries failed jobs when its
+          ``submit(..., retries=, backoff=)`` policy is used directly.
 
         Observability (``"cluster"`` and ``"service"`` backends): pass
         ``trace_path="run.jsonl"`` to append every lifecycle event

@@ -44,11 +44,23 @@ class SimulatedNodeFailure(RuntimeError):
 
 @dataclass
 class FailureEvent:
+    """Shared failure vocabulary for both backends.
+
+    The SPMD executor records simulated events (``step``/``node`` index);
+    the real transport's membership layer records *detected* ones and
+    fills the detection metadata: the dead node's string id and how long
+    the heartbeat monitor took to notice after the last beat.  Telemetry
+    consumers (``failure`` bus events, ``/metrics``) read the superset.
+    """
+
     step: int
     kind: FailureKind = "crash"
     node: int = 0
     # straggler: multiplicative slowdown applied to the injected node
     slowdown: float = 4.0
+    # detection metadata (real transport only; defaults for simulated events)
+    node_id: str = ""
+    detect_latency_s: float = 0.0
 
 
 @dataclass

@@ -149,6 +149,9 @@ def test_placement_policy_validation():
         PlacementPolicy(min_nodes=4).validate(3)
     with pytest.raises(ValueError, match="max_respawns"):
         PlacementPolicy(max_respawns=-1).validate(3)
+    PlacementPolicy(max_heals=2).validate(3)
+    with pytest.raises(ValueError, match="max_heals"):
+        PlacementPolicy(max_heals=-1).validate(3)
 
 
 # ---------------------------------------------------------------------------
