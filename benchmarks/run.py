@@ -573,10 +573,17 @@ def chaos_smoke() -> list[str]:
 
 
 def _two_stage_pipeline_spec(lines: int = P2_LINES, width: int = WIDTH,
-                             max_iters: int = P2_MAX_ITERS):
+                             max_iters: int = P2_MAX_ITERS, *,
+                             route: str | None = None,
+                             block: tuple[str, str] | None = None):
     """Mandelbrot rendered per band (stage 1, the compute-heavy hop) whose
     per-line records are then reduced per band (stage 2, a cheap hop on its
-    own node) — the multi-stage shape the PipelineSpec API adds."""
+    own node) — the multi-stage shape the PipelineSpec API adds.
+
+    ``route="peer"`` marks the render->reduce hop for direct node-to-node
+    shipping; ``block=(name, digest)`` makes the reduce stage fetch that
+    broadcast block once per worker and digest-check it, so a broken
+    chunk-stripe fetch fails the job instead of passing silently."""
     lines_per_item = LINES_PER_ITEM
 
     def init(n_items):
@@ -608,10 +615,21 @@ def _two_stage_pipeline_spec(lines: int = P2_LINES, width: int = WIDTH,
             for i in range(lines_per_item)
         ]
 
+    checked: list = []  # per-worker once-flag (each process gets its own)
+
     def reduce_band(records):
         t = w = p = 0
         for (ti, wi, pi) in records:
             t, w, p = t + ti, w + wi, p + pi
+        if block is not None and not checked:
+            from repro.cluster.peer import block_digest, get_block
+
+            name, digest = block
+            blob = get_block(name, timeout=60.0)
+            if blob is None or block_digest(blob) != digest:
+                raise RuntimeError(
+                    f"broadcast block {name!r} missing or corrupt")
+            checked.append(True)
         return (t, w, p)
 
     def collect(acc, item):
@@ -623,7 +641,8 @@ def _two_stage_pipeline_spec(lines: int = P2_LINES, width: int = WIDTH,
                               init_data=(lines // lines_per_item,),
                               create=create))
             .stage(render, nodes=2, workers=2, name="render")
-            .stage(reduce_band, nodes=1, workers=1, name="reduce")
+            .stage(reduce_band, nodes=1, workers=1, name="reduce",
+                   route=route)
             .collect(ResultDetails(name="Mcollect", init=lambda: (0, 0, 0),
                                    collect=collect))
             .build())
@@ -669,6 +688,138 @@ def pipeline_two_stage() -> list[str]:
         )
     rows.append(f"pipeline2_match,0,results_match={match}")
     return rows
+
+
+def peer_pipeline() -> list[str]:
+    """Peer data plane vs host relay on the two-stage pipeline.
+
+    One 3-node ClusterService pool runs the P2 Mandelbrot bands->reduce
+    instance twice with the same geometry: first with the render->reduce
+    hop host-relayed (the v1 data plane), then with ``route="peer"`` so
+    render nodes ship band records straight to a reduce node and the host
+    carries only per-item acks.  Before the peer run a ~2 MiB broadcast
+    block is published and digest-checked inside the reduce stage, which
+    exercises the chunk-stripe fetch path (each node host-fetches its
+    stripe and trades the rest peer-to-peer).
+
+    Everything lands in results/bench_peer.json; CI's peer-smoke job
+    gates on results_match for both runs, ``host_relay_bytes == 0`` on
+    the peer run, and at least one chunk fetched from a peer.
+    """
+    _enable_compile_cache()
+    _warm(P2_MAX_ITERS)
+    from repro.cluster.service import ClusterService
+
+    builder = ClusterBuilder()
+    t0 = time.perf_counter()
+    expected = builder.build_application(
+        _two_stage_pipeline_spec(), backend="threads").run()
+    dt_threads = time.perf_counter() - t0
+
+    launcher = _bench_launcher()
+    if launcher is None:
+        from repro.cluster.deploy import LocalLauncher
+
+        launcher = LocalLauncher(
+            preload=("repro.kernels.mandelbrot.ops",),
+            compile_cache_dir=os.path.abspath(COMPILE_CACHE),
+        )
+    rows: list[str] = []
+    record: dict = {"threads_seconds": round(dt_threads, 4)}
+    svc = ClusterService(
+        nodes=3, workers=2,
+        launcher=launcher,
+        bind_host=BIND_HOST,
+        register_timeout=120.0,
+    )
+    try:
+        with svc:
+            # Deterministic ~2 MiB payload = three 1 MiB chunks across
+            # three nodes: the stripe hands every node one host-fetch and
+            # forces the other two chunks to come from peers.
+            blob = bytes(range(256)) * (2 * 1024 * 1024 // 256 + 1)
+            digest = svc.publish_block("peer_bench_weights", blob)
+            for mode in ("host", "peer"):
+                spec = _two_stage_pipeline_spec(
+                    route="peer" if mode == "peer" else None,
+                    block=("peer_bench_weights", digest)
+                    if mode == "peer" else None,
+                )
+                t0 = time.perf_counter()
+                handle = svc.submit(spec, timeout=600.0)
+                result = handle.result(timeout=600.0)
+                dt = time.perf_counter() - t0
+                stats = handle.stats()
+                record[mode] = {
+                    "seconds": round(dt, 4),
+                    "results_match": result == expected,
+                    "host_relay_bytes": stats["host_relay_bytes"],
+                    "peer_forwarded": stats["peer_forwarded"],
+                    "duplicates_dropped": stats["duplicates_dropped"],
+                }
+                rows.append(
+                    f"peer_pipeline_{mode},{dt * 1e6:.0f},"
+                    f"results_match={result == expected}"
+                    f";host_relay_bytes={stats['host_relay_bytes']}"
+                    f";peer_forwarded={stats['peer_forwarded']}"
+                )
+            snap = svc.metrics_snapshot()
+            reports = [n.get("report") or {}
+                       for n in (snap.get("nodes") or {}).values()]
+            for k in ("blocks_fetched_from_peers", "blocks_fetched_from_host",
+                      "peer_bytes_sent", "peer_bytes_recv"):
+                record[k] = sum(r.get(k, 0) for r in reports)
+            record["metrics"] = snap
+    finally:
+        record["orphaned"] = svc.orphaned()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, "bench_peer.json")
+    with open(out_path, "w") as fh:
+        json.dump({"peer_pipeline": record}, fh, indent=2)
+    _append_peer_trajectory(record)
+    rows.append(
+        f"peer_pipeline_blocks,0,"
+        f"from_peers={record['blocks_fetched_from_peers']}"
+        f";from_host={record['blocks_fetched_from_host']}"
+    )
+    rows.append(
+        f"peer_pipeline_json,0,"
+        f"written={os.path.relpath(out_path, os.path.dirname(__file__))}"
+    )
+    return rows
+
+
+def _append_peer_trajectory(record: dict) -> None:
+    """One appended record per peer_pipeline run: relayed-vs-peer bytes
+    stay comparable across PRs."""
+    path = os.path.join(RESULTS_DIR, "bench_trajectory.json")
+    history: list = []
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                history = json.load(fh)
+        except (OSError, ValueError):
+            history = []
+    history.append({
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "bench": "peer_pipeline",
+        "instance": {"lines": P2_LINES, "width": WIDTH,
+                     "max_iters": P2_MAX_ITERS,
+                     "lines_per_item": LINES_PER_ITEM},
+        "threads_seconds": record["threads_seconds"],
+        "host_relay_bytes": {m: record[m]["host_relay_bytes"]
+                             for m in ("host", "peer")},
+        "peer_forwarded": record["peer"]["peer_forwarded"],
+        "peer_bytes_sent": record.get("peer_bytes_sent", 0),
+        "blocks_fetched_from_peers": record.get("blocks_fetched_from_peers", 0),
+        "results_match": all(record[m]["results_match"]
+                             for m in ("host", "peer")),
+    })
+    with open(path, "w") as fh:
+        json.dump(history, fh, indent=2)
 
 
 def table3_multicore_vs_cluster() -> list[str]:
@@ -770,6 +921,7 @@ def main() -> None:
         warm_resubmit,
         chaos_smoke,
         pipeline_two_stage,
+        peer_pipeline,
         load_time_linearity,
         verification_cost,
         kernel_microbench,

@@ -85,6 +85,7 @@ FAULT_KINDS = (
     "corrupt",
     "stall_heartbeat",
     "partition",
+    "partition_peer",
     "straggler",
 )
 
@@ -134,8 +135,8 @@ class Fault:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}"
             )
-        if self.kind == "kill_node" and not self.node:
-            raise ValueError("kill_node faults must name their node=")
+        if self.kind in ("kill_node", "partition_peer") and not self.node:
+            raise ValueError(f"{self.kind} faults must name their node=")
         if not (0.0 < self.probability <= 1.0):
             raise ValueError(
                 f"probability must be in (0, 1], got {self.probability}"
@@ -411,6 +412,18 @@ class ChaosController:
             # and the host looks dead to the node.
             self.wire.install(_WireRule(fault, "drop", "recv", expires))
             self.wire.install(_WireRule(fault, "drop", "send", expires))
+        elif fault.kind == "partition_peer":
+            # Cut the node's *peer data plane* only — the host link stays
+            # healthy, so the control plane sees a live node whose peer
+            # edges fail, and senders must walk their fallback targets
+            # (ultimately the host relay).  The seam is process-local, so
+            # this is only effective under the in-process launcher; under
+            # subprocess pools it is a no-op (documented in peer.py).
+            from repro.cluster import peer as peer_mod
+
+            peer_mod.partition_node(
+                fault.node, fault.duration_s
+                if fault.duration_s is not None else 1.0)
         elif fault.kind in ("drop", "stall_heartbeat"):
             self.wire.install(_WireRule(fault, "drop", "recv", expires))
         elif fault.kind in ("delay", "straggler"):

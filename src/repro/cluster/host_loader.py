@@ -88,6 +88,7 @@ from repro.cluster.membership import (
     Membership,
     NodeRecord,
 )
+from repro.cluster import peer as peer_mod
 from repro.cluster.telemetry import Telemetry
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
@@ -96,7 +97,9 @@ from repro.cluster.wire import (
     Frame,
     FrameConnection,
     FrameType,
+    _buffers_len,
     dumps_code,
+    encode_payload,
 )
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor, WorkFunctionError
@@ -121,6 +124,11 @@ class HostStats:
     heals: int = 0  # mid-run deaths answered with a replacement launch
     late_joins: int = 0  # nodes admitted after the run started
     degraded_start: bool = False  # job admitted below full strength
+    # Peer data-plane counters (the host demoted to control plane).
+    item_acks: int = 0  # ITEM_ACK frames received
+    peer_forwarded: int = 0  # hop items shipped node-to-node (acked)
+    peer_redispatched: int = 0  # peer-stranded items recomputed upstream
+    host_relay_bytes: int = 0  # stage-hop payload bytes relayed via host
 
 
 class JobState:
@@ -157,6 +165,22 @@ class JobState:
         self.inflight: list[dict[int, tuple[str, Any]]] = [{}
                                                            for _ in range(S)]
         self.done_ids: list[set[int]] = [set() for _ in range(S)]
+        # Peer-routed hops (the receiving stage's ``route="peer"`` knob):
+        # source stage -> {"key_fn": ...}.  On such a hop the host only
+        # *ledgers* the transfer: an ITEM_ACK moves the item into
+        # ``peer_inflight[s+1]``, keyed by the stage-s result id and
+        # holding (target node, the stage-s INPUT object) so a dead
+        # target's items can be recomputed upstream — the result value
+        # itself never transits the host.
+        self.peer_hops: dict[int, dict] = (
+            spec.peer_routed_hops()
+            if hasattr(spec, "peer_routed_hops") else {}
+        )
+        self.peer_inflight: list[dict[int, tuple[str, Any]]] = [
+            {} for _ in range(S)]
+        # WORK_BATCH send time per (stage, item id): the item-latency
+        # histogram observes completion-minus-dispatch.
+        self.dispatch_ts: dict[tuple[int, int], float] = {}
         self.r_details = spec.collector.r_details
         self.acc = self.r_details.init()
         # Shipped code, one (digest, cloudpickle blob) per stage: pickled
@@ -187,6 +211,8 @@ class JobState:
         # behaviour to individual pool members.
         self.duplicates_dropped = 0
         self.forwarded = 0
+        self.peer_forwarded = 0
+        self.host_relay_bytes = 0
         self.items_by_node: dict[str, int] = {}
         self.cache_by_node: dict[str, dict[str, int]] = {}
 
@@ -197,11 +223,12 @@ class JobState:
         if s == 0:
             return self.emit_done
         return (self.input_exhausted(s - 1) and not self.pending[s - 1]
-                and not self.inflight[s - 1])
+                and not self.inflight[s - 1]
+                and not self.peer_inflight[s - 1])
 
     def stage_done(self, s: int) -> bool:
         return (self.input_exhausted(s) and not self.pending[s]
-                and not self.inflight[s])
+                and not self.inflight[s] and not self.peer_inflight[s])
 
     def next_item(self, s: int):
         if self.pending[s]:
@@ -304,6 +331,10 @@ class HostLoader:
         self.flush_interval = flush_interval
         self.stats = HostStats()
         self.result: Any = None
+        # Broadcast blocks: named read-only payloads published once on the
+        # host; nodes stripe the initial chunk fetches across themselves
+        # and then trade chunks peer-to-peer (~1 host copy total).
+        self.blocks = peer_mod.BlockRegistry()
 
         # Telemetry: lifecycle events and slow gauges are *pushed* from the
         # dispatcher at state changes; fast-moving values the host already
@@ -454,6 +485,9 @@ class HostLoader:
             )
         with self.timing.phase("host", "load"):
             self._await_registrations()
+        # Every member is known now: ship the complete peer directory (the
+        # per-registration LOADs carried partial ones).
+        self._broadcast_peer_dir()
         # Demand that raced the bootstrap (an early node finishing its LOAD
         # while stragglers registered) re-enters the event stream here.
         for ev in self._early_events:
@@ -487,6 +521,7 @@ class HostLoader:
             self.serve_error = exc
             self.pool_ready.set()
             return
+        self._broadcast_peer_dir()
         for ev in self._early_events:
             self._events.put(ev)
         self._early_events.clear()
@@ -553,13 +588,30 @@ class HostLoader:
                     # Legacy single-result form (one frame per item).
                     self._collect_results(node_id, frame.job_id,
                                           [frame.payload], 0)
+                elif frame.ftype is FrameType.ITEM_ACK:
+                    p = frame.payload or {}
+                    self._peer_acks(node_id, frame.job_id,
+                                    p.get("acks") or [],
+                                    int(p.get("credits", 0)))
                 elif frame.ftype is FrameType.HEARTBEAT:
                     self.membership.beat(node_id)
                     rep = (frame.payload or {}).get("report")
                     if rep:
                         # Node-side phase/cache counters piggybacked on the
-                        # beat — the only node->host telemetry channel.
+                        # beat (kept as the slow fallback channel).
                         self.telemetry.set_node(node_id, report=rep)
+                elif frame.ftype is FrameType.REPORT:
+                    # Off-beat telemetry push: gauges track completions as
+                    # they happen instead of lagging one heartbeat.  NOT a
+                    # liveness beat — death detection stays on the dedicated
+                    # heartbeat path, so a node whose beacon died (or is
+                    # chaos-stalled) is still reaped even while its data
+                    # path keeps reporting.
+                    rep = (frame.payload or {}).get("report")
+                    if rep:
+                        self.telemetry.set_node(node_id, report=rep)
+                elif frame.ftype is FrameType.BLOCK_REQUEST:
+                    self._serve_block(node_id, frame.payload or {})
                 elif frame.ftype is FrameType.UT:
                     self._node_finished(node_id, frame.payload)
             elif kind == "loaded":
@@ -599,6 +651,7 @@ class HostLoader:
                         cores=int(payload.get("cores", 1)),
                         pid=int(payload.get("pid", 0)),
                         conn=conn,
+                        peer_port=int(payload.get("peer_port", 0)),
                     )
                 except ValueError:
                     conn.close()  # duplicate of a live member
@@ -613,6 +666,11 @@ class HostLoader:
                     for job in self._jobs.values():
                         if job.active:
                             self._send_load(rec, job)
+                # The pool's routing peers must learn the newcomer (and it
+                # the pool) or peer hops route around it forever.
+                self._broadcast_peer_dir()
+            elif kind == "blocks":
+                self._broadcast_blocks()
             elif kind == "submit":
                 self._admit(event[1])
             self._check_liveness()
@@ -640,8 +698,10 @@ class HostLoader:
             # forever, so they fail the job (one-shot run() re-raises).
             self._fail_job(job, exc)
             return False
+        now = time.monotonic()
         for item_id, obj in batch:
             job.inflight[s][item_id] = (rec.node_id, obj)
+            job.dispatch_ts[(s, item_id)] = now
         self.stats.work_batches += 1
         self.stats.max_batch = max(self.stats.max_batch, len(batch))
         self._publish_job(job)
@@ -696,6 +756,184 @@ class HostLoader:
             if rec.alive and rec.credits > 0:
                 self._answer(rec.node_id, 0)
 
+    # -- peer control plane --------------------------------------------------
+
+    def _peer_acks(self, node_id: str, job_id: int, acks: list,
+                   credits: int) -> None:
+        """A stage-s node shipped results directly to stage-s+1 peers and
+        acked the ids: advance the exactly-once ledger without the values.
+
+        Each acked item moves from ``inflight[s]`` into
+        ``peer_inflight[s+1]`` (target node, stage-s INPUT) so a death of
+        the target re-computes it upstream.  Credits piggyback exactly as
+        on a RESULT_BATCH (the sender already excluded peer-delivered
+        inputs, which never consumed a window slot).
+        """
+        self.stats.item_acks += 1
+        job = self._jobs.get(job_id)
+        if job is None or job.error is not None:
+            if credits:
+                self._answer(node_id, credits)
+            return
+        rec = self.membership.nodes.get(node_id)
+        for a in acks:
+            s = int(a.get("s", 0))
+            rid = a.get("id")
+            target = a.get("to")
+            if not 0 <= s < job.S - 1:
+                continue  # malformed: the last stage has no peer hop
+            entry = job.inflight[s].pop(rid, None)
+            t0 = job.dispatch_ts.pop((s, rid), None)
+            if t0 is not None:
+                self.telemetry.observe(
+                    "item_latency_ms", (time.monotonic() - t0) * 1e3)
+            if rid in job.done_ids[s]:
+                self.stats.duplicates_dropped += 1
+                job.duplicates_dropped += 1
+                continue
+            if entry is None:
+                # A stale ack: the host already requeued this item (its
+                # first peer target died) — the requeued copy is
+                # authoritative, and marking this one done would lose it.
+                continue
+            _, input_obj = entry
+            trec = self.membership.nodes.get(target) if target else None
+            if rid not in job.done_ids[s + 1] and (
+                    trec is None or not trec.alive):
+                # Ack-after-death race: the copy was shipped into a node
+                # the host has already reaped (so _requeue_node_items
+                # never saw this ledger entry) and nothing downstream
+                # delivered it — it is lost.  Recompute upstream under
+                # the same id, exactly as the stranded-ledger path does.
+                job.pending[s].append((rid, input_obj))
+                self.stats.redispatched += 1
+                self.stats.peer_redispatched += 1
+                continue
+            job.done_ids[s].add(rid)
+            # Result-before-ack race: the target may have computed and
+            # delivered the forwarded item before this ack arrived (two
+            # independent TCP streams).  Ledger it only if stage s+1 has
+            # not already completed it, or it would sit in peer_inflight
+            # forever and stall termination.
+            if rid not in job.done_ids[s + 1]:
+                job.peer_inflight[s + 1][rid] = (target, input_obj)
+            self.stats.forwarded += 1
+            self.stats.peer_forwarded += 1
+            job.forwarded += 1
+            job.peer_forwarded += 1
+            job.items_by_node[node_id] = \
+                job.items_by_node.get(node_id, 0) + 1
+            if rec is not None:
+                rec.items_done += 1
+            self.timing.count_item(node_id)
+        self._publish_job(job)
+        if credits:
+            self._answer(node_id, credits)
+        self._flush_waiting()
+        self._maybe_finish(job)
+
+    def _peer_dir(self) -> dict[str, tuple[str, int]]:
+        """node_id -> (ip, peer data-plane port) for every routable member
+        (a node that reported no peer port is simply unreachable for peer
+        traffic and omitted — its results fall back through the host)."""
+        out: dict[str, tuple[str, int]] = {}
+        for rec in self.membership.nodes.values():
+            if not rec.alive or not rec.peer_port:
+                continue
+            ip = rec.address.split(":", 1)[0] if rec.address else "127.0.0.1"
+            out[rec.node_id] = (ip, rec.peer_port)
+        return out
+
+    def _peer_routes(self, job: JobState | None) -> dict:
+        """Host-assigned routing table for one job's peer hops: for each
+        source stage the ordered target list (stage-s+1 capacity), the
+        partition mode, and the serialized key function for keyed
+        shuffles.  Pool jobs route over every routable member (any node
+        serves any stage); pinned one-shot jobs route to the nodes
+        assigned to the receiving stage."""
+        if job is None or not job.peer_hops:
+            return {}
+        directory = self._peer_dir()
+        routes: dict[str, dict] = {}
+        for s, cfg in sorted(job.peer_hops.items()):
+            if job.pinned:
+                targets = [nid for nid, st in job.spec.node_assignments()
+                           if st == s + 1 and nid in directory]
+            else:
+                targets = [nid for nid in directory]
+            key_fn = cfg.get("key_fn")
+            routes[str(s)] = {
+                "targets": targets,
+                "mode": "keyed" if key_fn is not None else "rr",
+                "key_fn": (dumps_code(key_fn)
+                           if key_fn is not None else None),
+            }
+        return routes
+
+    def _broadcast_peer_dir(self) -> None:
+        """Ship the complete peer directory to every live node (a LOAD
+        with no ``workers`` key is a refresh, not a deployment).  Called
+        after the membership barrier and on every late join/heal — the
+        per-registration LOADs only carried the directory known so far."""
+        directory = self._peer_dir()
+        if not directory:
+            return
+        payload = {"peer": {"dir": directory, "routes": {}}}
+        for rec in self.membership.nodes.values():
+            if not rec.alive or rec.conn is None:
+                continue
+            try:
+                rec.conn.send(Frame(FrameType.LOAD, payload,
+                                    LOAD_WIRE_CHANNEL))
+            except (OSError, ValueError):
+                pass
+
+    def _broadcast_blocks(self) -> None:
+        """Push the block manifest to every live node so striped fetches
+        start now rather than on the next job LOAD."""
+        manifest = self.blocks.manifest()
+        if not manifest:
+            return
+        payload = {"blocks": manifest, "peer": {"dir": self._peer_dir(),
+                                                "routes": {}}}
+        for rec in self.membership.nodes.values():
+            if not rec.alive or rec.conn is None:
+                continue
+            try:
+                rec.conn.send(Frame(FrameType.LOAD, payload,
+                                    LOAD_WIRE_CHANNEL))
+            except (OSError, ValueError):
+                pass
+
+    def _serve_block(self, node_id: str, p: dict) -> None:
+        """Answer one striped BLOCK_REQUEST with its chunk (data=None on a
+        miss — the node retries from peers or re-requests later)."""
+        rec = self.membership.nodes.get(node_id)
+        if rec is None or rec.conn is None:
+            return
+        name = p.get("name")
+        idx = int(p.get("chunk", 0))
+        data = self.blocks.get_chunk(name, idx)
+        if data is not None:
+            self.telemetry.observe("block_chunk_bytes", len(data))
+        try:
+            rec.conn.send(Frame(
+                FrameType.BLOCK_CHUNK,
+                {"name": name, "chunk": idx, "data": data},
+                LOAD_WIRE_CHANNEL,
+            ))
+        except (OSError, ValueError):
+            pass
+
+    def publish_block(self, name: str, data: bytes) -> str:
+        """Publish a named read-only payload for the whole pool; returns
+        its digest.  Registration is synchronous (any thread); the
+        manifest broadcast rides the event queue so socket writes stay on
+        the dispatcher."""
+        digest = self.blocks.publish(name, data)
+        self._events.put(("blocks",))
+        return digest
+
     def _items_collected(self) -> int:
         if self._primary is not None:
             return self._primary.items_collected
@@ -724,17 +962,42 @@ class HostLoader:
                                if ev else None),
             at_item=ev.step if ev else None,
         )
+        self._requeue_node_items(rec.node_id)
+        self._heal(rec)
+
+    def _requeue_node_items(self, node_id: str) -> bool:
+        """Requeue every item a departed node can no longer deliver.
+
+        Host-dispatched in-flight items re-enter their own stage's queue.
+        Peer-shipped items stranded on the node are *recomputed* upstream:
+        the host ledgers only the stage-s input of a peer hop, so the
+        stage-s result id is un-done and the item re-dispatched at stage s
+        under the same id — the dedup set at s+1 absorbs any racing late
+        delivery from the first computation.
+        """
+        requeued = False
         for job in self._jobs.values():
             if not job.active:
                 continue
             for s in range(job.S):
                 lost = [iid for iid, (nid, _) in job.inflight[s].items()
-                        if nid == rec.node_id]
+                        if nid == node_id]
                 for iid in lost:
                     _, obj = job.inflight[s].pop(iid)
                     job.pending[s].append((iid, obj))
                     self.stats.redispatched += 1
-        self._heal(rec)
+                    requeued = True
+                stranded = [rid for rid, (nid, _)
+                            in job.peer_inflight[s].items()
+                            if nid == node_id]
+                for rid in stranded:
+                    _, obj = job.peer_inflight[s].pop(rid)
+                    job.done_ids[s - 1].discard(rid)
+                    job.pending[s - 1].append((rid, obj))
+                    self.stats.redispatched += 1
+                    self.stats.peer_redispatched += 1
+                    requeued = True
+        return requeued
 
     def _heal(self, rec: NodeRecord) -> bool:
         """Mid-run pool healing: answer a death with a fresh launch through
@@ -783,6 +1046,7 @@ class HostLoader:
             if credits:
                 self._answer(node_id, credits)
             return
+        self.telemetry.observe("result_batch_items", len(results))
         for p in results:
             s = int(p.get("s", 0))
             if "error" in p:
@@ -794,19 +1058,42 @@ class HostLoader:
                 break
             # Always clear inflight — a redispatched item can complete
             # twice (zombie result + survivor result) and both entries
-            # must go or termination stalls.
+            # must go or termination stalls.  Peer-delivered items live in
+            # the peer ledger instead.
             job.inflight[s].pop(p["id"], None)
+            job.peer_inflight[s].pop(p["id"], None)
+            t0 = job.dispatch_ts.pop((s, p["id"]), None)
+            if t0 is not None:
+                self.telemetry.observe(
+                    "item_latency_ms", (time.monotonic() - t0) * 1e3)
             if p["id"] in job.done_ids[s]:
                 self.stats.duplicates_dropped += 1
                 job.duplicates_dropped += 1
             else:
                 job.done_ids[s].add(p["id"])
                 if s + 1 < job.S:
-                    # The hop rendezvous: this result *is* stage s+1's
-                    # next work item (dedup above makes it exactly once).
-                    job.pending[s + 1].append((job.next_id[s + 1],
-                                               p["value"]))
-                    job.next_id[s + 1] += 1
+                    # Any payload passing through here rode the host for
+                    # its stage hop — on a peer hop that only happens in
+                    # degraded relay (every peer target unreachable), on a
+                    # host-routed hop it is the normal path.  Either way
+                    # the bytes are the traffic the peer plane exists to
+                    # absorb, so both count toward host_relay_bytes.
+                    _, bufs = encode_payload(p["value"])
+                    nbytes = _buffers_len(bufs)
+                    job.host_relay_bytes += nbytes
+                    self.stats.host_relay_bytes += nbytes
+                    if s in job.peer_hops:
+                        # Keep the result-id space so host-relayed and
+                        # peer-shipped copies of one item dedup against each
+                        # other at stage s+1.
+                        job.pending[s + 1].append((p["id"], p["value"]))
+                    else:
+                        # The hop rendezvous: this result *is* stage s+1's
+                        # next work item (dedup above makes it exactly
+                        # once).
+                        job.pending[s + 1].append((job.next_id[s + 1],
+                                                   p["value"]))
+                        job.next_id[s + 1] += 1
                     self.stats.forwarded += 1
                     job.forwarded += 1
                 else:
@@ -1018,11 +1305,16 @@ class HostLoader:
                 # frames (a loaded node's first WORK_REQUEST) are replayed
                 # into the dispatcher once bootstrap completes.
                 _, node_id, frame = event
-                if frame.ftype is FrameType.HEARTBEAT:
-                    self.membership.beat(node_id)
+                if frame.ftype in (FrameType.HEARTBEAT, FrameType.REPORT):
+                    if frame.ftype is FrameType.HEARTBEAT:
+                        self.membership.beat(node_id)
                     rep = (frame.payload or {}).get("report")
                     if rep:
                         self.telemetry.set_node(node_id, report=rep)
+                elif frame.ftype is FrameType.BLOCK_REQUEST:
+                    # A fast-booting node striping pre-published blocks
+                    # while stragglers still register.
+                    self._serve_block(node_id, frame.payload or {})
                 else:
                     self._early_events.append(event)
                 continue
@@ -1040,6 +1332,7 @@ class HostLoader:
                     cores=int(payload.get("cores", 1)),
                     pid=int(payload.get("pid", 0)),
                     conn=conn,
+                    peer_port=int(payload.get("peer_port", 0)),
                 )
             except ValueError:
                 conn.close()  # duplicate node_id: reject it, keep waiting
@@ -1139,7 +1432,16 @@ class HostLoader:
             "flush_items": self.flush_items,
             "flush_interval": flush_interval,
             "stages": entries,
+            # Peer data plane: the directory known so far (completed by the
+            # post-barrier broadcast) and, per peer-routed hop, this job's
+            # routing table.  Published broadcast blocks ride along so the
+            # node starts its striped fetch during the load window.
+            "peer": {"dir": self._peer_dir(),
+                     "routes": self._peer_routes(job)},
         }
+        manifest = self.blocks.manifest()
+        if manifest:
+            payload["blocks"] = manifest
 
         def sender() -> None:
             try:
@@ -1197,19 +1499,7 @@ class HostLoader:
         # its host-side channel died under it) will never deliver results
         # for its in-flight items — requeue them exactly as a death does,
         # or the job stalls to its deadline.
-        requeued = False
-        for job in self._jobs.values():
-            if not job.active:
-                continue
-            for s in range(job.S):
-                lost = [iid for iid, (nid, _) in job.inflight[s].items()
-                        if nid == node_id]
-                for iid in lost:
-                    _, obj = job.inflight[s].pop(iid)
-                    job.pending[s].append((iid, obj))
-                    self.stats.redispatched += 1
-                    requeued = True
-        if requeued:
+        if self._requeue_node_items(node_id):
             self._flush_waiting()
 
     def _collect_wire_stats(self) -> None:
@@ -1252,6 +1542,8 @@ class HostLoader:
             items_collected=job.items_collected,
             duplicates_dropped=job.duplicates_dropped,
             forwarded=job.forwarded,
+            peer_forwarded=job.peer_forwarded,
+            host_relay_bytes=job.host_relay_bytes,
             code_shipped=job.code_shipped,
             code_cached=job.code_cached,
             # ended_at, not the event: terminal publishes happen just
@@ -1311,6 +1603,9 @@ class HostLoader:
         out["nodes_alive"] = sum(1 for r in nodes if r.alive)
         out["credits_parked"] = sum(r.credits for r in nodes if r.alive)
         out["jobs_active"] = sum(1 for j in jobs if j.active)
+        out["blocks_published"] = len(self.blocks.manifest())
+        out["block_chunks_served"] = self.blocks.chunks_served
+        out["block_bytes_served"] = self.blocks.chunk_bytes_served
         return out
 
     # -- teardown -----------------------------------------------------------

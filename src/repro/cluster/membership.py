@@ -77,6 +77,10 @@ class NodeRecord:
     # The FailureEvent recorded when this node was declared dead (None
     # while alive) — the heal path reads its detection metadata.
     last_failure: Any = None
+    # Listening port of the node's peer data-plane server (0 = none
+    # reported; the node is unreachable for peer routing / block trading
+    # and routing tables simply omit it).
+    peer_port: int = 0
 
     @property
     def alive(self) -> bool:
@@ -125,7 +129,7 @@ class Membership:
         return rec
 
     def register(self, node_id: str, address: str, *, cores: int = 1,
-                 pid: int = 0, conn: Any = None,
+                 pid: int = 0, conn: Any = None, peer_port: int = 0,
                  now: float | None = None) -> NodeRecord:
         now = time.monotonic() if now is None else now
         rec = self.nodes.get(node_id)
@@ -139,6 +143,7 @@ class Membership:
             rec.cores = cores
             rec.pid = pid
             rec.conn = conn
+            rec.peer_port = peer_port
             rec.registered_at = rec.last_beat = now
             self._transition(rec, REGISTERED, now)
             return rec
@@ -152,6 +157,7 @@ class Membership:
             registered_at=now,
             last_beat=now,
             conn=conn,
+            peer_port=peer_port,
             state=LAUNCHING,
         )
         self.nodes[node_id] = rec

@@ -64,6 +64,8 @@ import time
 import traceback
 from typing import Any, Callable, Sequence
 
+from repro.cluster import peer as peer_mod
+from repro.cluster.netchannels import ChannelClosed
 from repro.cluster.wire import (
     APP_WIRE_CHANNEL,
     CODE_CACHE_SLOTS,
@@ -75,6 +77,11 @@ from repro.cluster.wire import (
     FrameType,
     loads_code,
 )
+
+# Minimum spacing of unsolicited REPORT frames: enough for live gauges to
+# track batch completion instead of lagging one heartbeat, small enough to
+# stay invisible next to the result traffic itself.
+REPORT_MIN_INTERVAL_S = 0.05
 
 # AOT-serialized executables shipped in the LOAD payload, keyed by name.
 # Work functions may read these (e.g. deserialize_and_load a compiled step).
@@ -162,9 +169,21 @@ def run_node(
     if on_conn is not None:
         on_conn(conn)
 
+    # The peer data plane: a listening socket siblings dial directly (stage
+    # forwarding + block trading).  Opened before REGISTER so the host can
+    # put this node in peer directories immediately; items arriving before
+    # the worker pool exists are held inside the server and drained once
+    # the handler is installed below.
+    block_store = peer_mod.BlockStore()
+    peer_dir: dict[str, tuple] = {}
+    peer_client = peer_mod.PeerClient(node_id, peer_dir)
+    peer_server = peer_mod.PeerServer(node_id, block_store)
+    peer_server.start()
+
     conn.send(Frame(
         FrameType.REGISTER,
-        {"node_id": node_id, "cores": os.cpu_count() or 1, "pid": os.getpid()},
+        {"node_id": node_id, "cores": os.cpu_count() or 1,
+         "pid": os.getpid(), "peer_port": peer_server.port},
         LOAD_WIRE_CHANNEL,
     ))
 
@@ -180,12 +199,20 @@ def run_node(
     report = {"boot_ms": 0.0, "load_ms": 0.0, "items": 0,
               "cache_hits": 0, "cache_misses": 0, "jobs_bound": 0}
 
+    def snapshot_report() -> dict:
+        rep = dict(report)
+        rep.update(peer_server.counters())
+        rep.update(block_store.counters())
+        rep["peer_items_sent"] = peer_client.items_sent
+        rep["peer_bytes_sent"] = peer_client.bytes_sent
+        return rep
+
     def heartbeat() -> None:
         while not stop_beat.wait(beat_interval[0]):
             try:
                 conn.send(Frame(
                     FrameType.HEARTBEAT,
-                    {"node_id": node_id, "report": dict(report)},
+                    {"node_id": node_id, "report": snapshot_report()},
                     LOAD_WIRE_CHANNEL,
                 ))
             except OSError:
@@ -208,6 +235,8 @@ def run_node(
     def early_record() -> dict[str, Any]:
         # Host aborted (UT) or vanished during bootstrap: nothing ran.
         stop_beat.set()
+        peer_server.close()
+        peer_client.close()
         conn.close()
         return {"node_id": node_id, "boot_ms": round(boot_ms, 3),
                 "load_ms": 0.0, "run_ms": 0.0, "items": 0}
@@ -232,6 +261,41 @@ def run_node(
     flush_now = threading.Event()
     stop_flush = threading.Event()
 
+    # Peer routing state: per-job routing tables from LOAD, plus a holding
+    # pen for peer-delivered items whose stage binding has not arrived yet
+    # (a sibling's LOAD can complete before ours).
+    route_tables: dict[int, peer_mod.RouteTable] = {}
+    hold_lock = threading.Lock()
+    peer_hold: dict[int, list[dict]] = {}
+    last_report = [0.0]
+
+    def send_report(force: bool = False) -> None:
+        # The dedicated REPORT frame: pushed right after result activity so
+        # host-side gauges track completions instead of lagging one beat.
+        now = time.monotonic()
+        if not force and now - last_report[0] < REPORT_MIN_INTERVAL_S:
+            return
+        last_report[0] = now
+        try:
+            conn.send(Frame(
+                FrameType.REPORT,
+                {"node_id": node_id, "report": snapshot_report()},
+                LOAD_WIRE_CHANNEL,
+            ))
+        except OSError:
+            pass
+
+    def on_peer_items(job_id: int, items: list) -> None:
+        with hold_lock:
+            for item in items:
+                s = int(item.get("s", 0))
+                if (job_id, s) in fns:
+                    work_q.put((job_id, item))
+                else:
+                    peer_hold.setdefault(job_id, []).append(item)
+
+    peer_server.set_on_items(on_peer_items)
+
     def complete(job_id: int, result: dict, urgent: bool = False) -> None:
         with out_lock:
             out_bufs.setdefault(job_id, []).append(result)
@@ -239,18 +303,93 @@ def run_node(
         if urgent or n >= flush_items:
             flush_now.set()
 
+    def peer_deliver(jid: int, target: str, items: list[dict]) -> bool:
+        if target == node_id:
+            # Our own node is a valid next-stage target: skip the wire.
+            on_peer_items(jid, items)
+            peer_client.items_sent += len(items)
+            return True
+        try:
+            peer_client.send_items(jid, target, items)
+            return True
+        except ChannelClosed:
+            return False
+
     def flush() -> None:
         with out_lock:
             batches = [(jid, buf) for jid, buf in out_bufs.items() if buf]
             out_bufs.clear()
+        sent_any = False
         for jid, batch in batches:
-            payload = {"node_id": node_id, "results": batch,
+            rt = route_tables.get(jid)
+            host_results = batch
+            if rt is not None:
+                host_results = []
+                acks: list[dict] = []
+                ack_credits = 0
+                # Group by each item's first-preference target so one frame
+                # carries a whole flush worth of same-destination items.
+                groups: dict[str, list[tuple[dict, list[str]]]] = {}
+                for r in batch:
+                    s = int(r.get("s", 0))
+                    targets = (rt.targets_for(s, r["value"])
+                               if "value" in r and rt.has(s) else [])
+                    if not targets:
+                        host_results.append(r)
+                        continue
+                    groups.setdefault(targets[0], []).append((r, targets))
+
+                def fwd(r: dict) -> dict:
+                    return {"id": r["id"], "s": int(r["s"]) + 1,
+                            "obj": r["value"], "peer": True}
+
+                for primary, entries in groups.items():
+                    shipped: list[tuple[dict, str]] = []
+                    if peer_deliver(jid, primary,
+                                    [fwd(r) for r, _ in entries]):
+                        shipped = [(r, primary) for r, _ in entries]
+                    else:
+                        # Primary unreachable: walk each item's fallback
+                        # list; anything with no live peer goes to the host
+                        # as an ordinary relayed result (correct, degraded).
+                        for r, targets in entries:
+                            for t in targets[1:]:
+                                if peer_deliver(jid, t, [fwd(r)]):
+                                    shipped.append((r, t))
+                                    break
+                            else:
+                                host_results.append(r)
+                    for r, t in shipped:
+                        acks.append({"id": r["id"], "s": int(r["s"]),
+                                     "to": t})
+                        # Window credits return only for host-dispatched
+                        # inputs; peer-delivered ones never consumed a
+                        # credit, so crediting them would grow the window.
+                        if not r.get("peer"):
+                            ack_credits += 1
+                if acks:
+                    try:
+                        conn.send(Frame(
+                            FrameType.ITEM_ACK,
+                            {"node_id": node_id, "acks": acks,
+                             "credits": ack_credits},
+                            APP_WIRE_CHANNEL, job_id=jid,
+                        ))
+                    except OSError:
+                        pass
+                    sent_any = True
+            if not host_results:
+                continue
+            payload = {"node_id": node_id, "results": host_results,
                        # Each finished item frees one window slot: demand
                        # piggybacks on delivery (no separate request frame).
-                       "credits": len(batch)}
+                       # Peer-delivered inputs carry no credit (see above).
+                       "credits": sum(1 for r in host_results
+                                      if not r.get("peer"))}
             try:
                 conn.send(Frame(FrameType.RESULT_BATCH, payload,
                                 APP_WIRE_CHANNEL, job_id=jid))
+                sent_any = True
             except OSError:
                 pass  # host gone: the nrfa loop shuts the node down
             except Exception as exc:
@@ -259,17 +398,20 @@ def run_node(
                 try:
                     conn.send(Frame(
                         FrameType.RESULT_BATCH,
-                        {"node_id": node_id, "credits": len(batch),
+                        {"node_id": node_id, "credits": payload["credits"],
                          "results": [{
-                             "id": batch[0]["id"],
-                             "s": batch[0].get("s", 0),
+                             "id": host_results[0]["id"],
+                             "s": host_results[0].get("s", 0),
                              "error": f"{type(exc).__name__}: {exc}",
                              "traceback": traceback.format_exc(),
                          }]},
                         APP_WIRE_CHANNEL, job_id=jid,
                     ))
+                    sent_any = True
                 except OSError:
                     pass
+        if sent_any:
+            send_report()
 
     def flusher() -> None:
         while not stop_flush.is_set():
@@ -286,6 +428,9 @@ def run_node(
                 return
             job_id, item = got
             s = int(item.get("s", 0))
+            # Results remember whether their input arrived from a peer: the
+            # flusher returns window credits only for host-dispatched items.
+            tag = {"peer": True} if item.get("peer") else {}
             fn = fns.get((job_id, s))
             if fn is None:
                 # JOB_CLOSE raced ahead of in-flight items: the job is
@@ -295,14 +440,15 @@ def run_node(
                 # results of closed jobs and banks the piggybacked credit.
                 complete(job_id, {"id": item["id"], "s": s,
                                   "error": "stage binding dropped "
-                                           "(job closed)"},
+                                           "(job closed)", **tag},
                          urgent=True)
                 continue
             try:
                 value = fn(item["obj"])
                 if slowdown > 0.0:
                     time.sleep(slowdown)  # injected straggler (§6.1 testing)
-                complete(job_id, {"id": item["id"], "s": s, "value": value})
+                complete(job_id, {"id": item["id"], "s": s, "value": value,
+                                  **tag})
             except BaseException as exc:
                 # Report instead of dying silently: a dead worker thread
                 # would stall the node (heartbeats keep flowing, so the
@@ -310,7 +456,7 @@ def run_node(
                 complete(job_id,
                          {"id": item["id"], "s": s,
                           "error": f"{type(exc).__name__}: {exc}",
-                          "traceback": traceback.format_exc()},
+                          "traceback": traceback.format_exc(), **tag},
                          urgent=True)
                 continue
             with items_lock:
@@ -344,10 +490,73 @@ def run_node(
             bound = True
         if bound:
             report["jobs_bound"] += 1
+            # Drain peer-delivered items that raced ahead of this binding.
+            with hold_lock:
+                held = peer_hold.pop(job_id, [])
+                for item in held:
+                    if (job_id, int(item.get("s", 0))) in fns:
+                        work_q.put((job_id, item))
+                    else:
+                        peer_hold.setdefault(job_id, []).append(item)
+
+    fetching_blocks: set[tuple] = set()
+
+    def fetch_blocks_async(manifest: list[dict]) -> None:
+        # The manifest rides every LOAD (a publish broadcast, then each
+        # job ship): dedup in-flight fetches or each repeat would re-stripe
+        # the host for chunks already on their way.
+        with hold_lock:
+            manifest = [m for m in manifest
+                        if (m.get("name"), m.get("digest"))
+                        not in fetching_blocks]
+            if not manifest:
+                return
+            fetching_blocks.update(
+                (m.get("name"), m.get("digest")) for m in manifest)
+
+        def host_request(name: str, chunk: int) -> None:
+            try:
+                conn.send(Frame(FrameType.BLOCK_REQUEST,
+                                {"name": name, "chunk": chunk},
+                                LOAD_WIRE_CHANNEL))
+            except OSError:
+                pass
+
+        def runner() -> None:
+            try:
+                peer_mod.fetch_blocks(manifest, store=block_store,
+                                      client=peer_client,
+                                      host_request=host_request)
+            except Exception:
+                pass  # a failed fetch surfaces as get_block() timing out
+            finally:
+                # A block that failed to assemble may be retried by the
+                # next LOAD carrying it.
+                with hold_lock:
+                    for m in manifest:
+                        if not block_store.has(m.get("name")):
+                            fetching_blocks.discard(
+                                (m.get("name"), m.get("digest")))
+            send_report(force=True)
+
+        threading.Thread(target=runner, name="nl-block-fetch",
+                         daemon=True).start()
 
     def apply_load(job_id: int, plan: dict) -> None:
         nonlocal configured, workers, slowdown, window
         nonlocal flush_items, flush_interval, t_run0
+        pd = plan.get("peer")
+        if pd:
+            for nid, addr in (pd.get("dir") or {}).items():
+                peer_dir[nid] = (addr[0], int(addr[1]))
+            routes = pd.get("routes")
+            if routes:
+                route_tables[job_id] = peer_mod.RouteTable(routes)
+        blocks = plan.get("blocks")
+        if blocks:
+            fetch_blocks_async(blocks)
+        if "workers" not in plan:
+            return  # a directory/blocks refresh, not a deployment
         if not configured:
             configured = True
             workers = int(plan["workers"])
@@ -423,6 +632,11 @@ def run_node(
                     work_q.put((frame.job_id, item))
             elif frame.ftype is FrameType.WORK:  # legacy single form
                 work_q.put((frame.job_id, frame.payload))
+            elif frame.ftype is FrameType.BLOCK_CHUNK:
+                # A host reply to one of our striped BLOCK_REQUESTs.
+                p = frame.payload or {}
+                block_store.add_chunk(p.get("name"),
+                                      int(p.get("chunk", 0)), p.get("data"))
             elif frame.ftype is FrameType.JOB_CLOSE:
                 # The job is done (or failed) host-side: drop its dispatch
                 # bindings.  The code cache is untouched — keeping it hot
@@ -430,6 +644,9 @@ def run_node(
                 jid = frame.job_id
                 for key in [k for k in fns if k[0] == jid]:
                     del fns[key]
+                route_tables.pop(jid, None)
+                with hold_lock:
+                    peer_hold.pop(jid, None)
             frame = None
     except (ConnectionError, OSError, ValueError):
         # Host vanished (mid-recv): there is nobody to deliver to; shut
@@ -446,6 +663,8 @@ def run_node(
     flush_thread.join()
     run_ms = (time.perf_counter() - t_run0) * 1e3
     stop_beat.set()
+    peer_server.close()
+    peer_client.close()
 
     record = {
         "node_id": node_id,

@@ -140,6 +140,11 @@ class JobHandle:
             "items_collected": self._job.items_collected,
             "duplicates_dropped": self._job.duplicates_dropped,
             "forwarded": self._job.forwarded,
+            # Peer data plane: hop items shipped node-to-node vs the
+            # payload bytes that still relayed through the host (0 on a
+            # fully peer-routed hop — the acceptance figure).
+            "peer_forwarded": self._job.peer_forwarded,
+            "host_relay_bytes": self._job.host_relay_bytes,
             # Warm-load accounting: stage functions shipped by value vs
             # rebound from the nodes' digest-keyed code caches.
             "code_shipped": self._job.code_shipped,
@@ -479,6 +484,19 @@ class ClusterService:
         """Hard-kill one pool node: a real workstation loss, detected only
         by its heartbeats going silent (in-flight work is redispatched)."""
         self.handles[node_id].kill()
+
+    def publish_block(self, name: str, data: bytes) -> str:
+        """Publish a named read-only broadcast block to the pool.
+
+        Returns its digest.  Nodes stripe the initial chunk fetches across
+        themselves against the host and then trade chunks peer-to-peer, so
+        the payload leaves the host roughly once regardless of pool size;
+        work functions read it with ``repro.cluster.peer.get_block(name)``.
+        """
+        self.start()
+        if self._stop.is_set() or self._closed:
+            raise RuntimeError("cluster service is closed")
+        return self.host_loader.publish_block(name, data)
 
     # -- observability ------------------------------------------------------
 

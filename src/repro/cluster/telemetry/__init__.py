@@ -17,11 +17,12 @@ layer, node heartbeats, and service scheduler feed it.
 
 from repro.cluster.telemetry.http import TelemetryServer  # noqa: F401
 from repro.cluster.telemetry.registry import (  # noqa: F401
+    Histogram,
     Telemetry,
     TraceWriter,
     read_trace,
     total_counts,
 )
 
-__all__ = ["Telemetry", "TelemetryServer", "TraceWriter", "read_trace",
-           "total_counts"]
+__all__ = ["Histogram", "Telemetry", "TelemetryServer", "TraceWriter",
+           "read_trace", "total_counts"]

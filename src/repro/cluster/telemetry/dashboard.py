@@ -75,6 +75,8 @@ DASHBOARD_HTML = """<!doctype html>
 <div id="nodes"></div>
 <h2>jobs</h2>
 <div id="jobs"></div>
+<h2>histograms</h2>
+<div id="hists"></div>
 <h2>events</h2>
 <div id="events"></div>
 <script>
@@ -121,16 +123,22 @@ async function refresh() {
     tile(fmt(c.jobs_completed ?? 0), "jobs completed") +
     tile(fmt(c.items_total ?? 0), "items collected") +
     tile(bytes((c.wire_bytes_sent ?? 0) + (c.wire_bytes_recv ?? 0)), "bytes moved") +
+    tile(fmt(c.peer_forwarded ?? 0), "peer forwarded") +
+    tile(bytes(c.host_relay_bytes ?? 0), "host relay bytes") +
     tile(fmt(c.redispatched ?? 0), "redispatched");
   const nodes = Object.entries(snap.nodes || {}).sort();
   document.getElementById("nodes").innerHTML = table(
     [["node"], ["state"], ["items", "num"], ["credits", "num"],
-     ["sent", "num"], ["recv", "num"], ["boot ms", "num"], ["cache h/m", "num"]],
+     ["sent", "num"], ["recv", "num"], ["peer out/in", "num"],
+     ["blocks p/h", "num"], ["boot ms", "num"], ["cache h/m", "num"]],
     nodes.map(([id, n]) => {
       const w = n.wire || {}, r = n.report || {};
       return [[esc(id)], [state(n.state || "?")], [fmt(n.items), "num"],
         [fmt(n.credits), "num"], [bytes(w.bytes_sent), "num"],
-        [bytes(w.bytes_recv), "num"], [fmt(r.boot_ms), "num"],
+        [bytes(w.bytes_recv), "num"],
+        [`${bytes(r.peer_bytes_sent ?? 0)}/${bytes(r.peer_bytes_recv ?? 0)}`, "num"],
+        [`${fmt(r.blocks_fetched_from_peers ?? 0)}/${fmt(r.blocks_fetched_from_host ?? 0)}`, "num"],
+        [fmt(r.boot_ms), "num"],
         [`${fmt(r.cache_hits ?? 0)}/${fmt(r.cache_misses ?? 0)}`, "num"]];
     }));
   const jobs = Object.entries(snap.jobs || {}).sort((a, b) => a[0] - b[0]);
@@ -145,6 +153,16 @@ async function refresh() {
         [fmt(sum(j.pending)), "num"], [fmt(sum(j.inflight)), "num"],
         [fmt(j.items_collected), "num"], [fmt(j.duplicates_dropped), "num"],
         [`${fmt(j.code_shipped ?? 0)}/${fmt(j.code_cached ?? 0)}`, "num"]];
+    }));
+  const hists = Object.entries(snap.histograms || {}).sort();
+  document.getElementById("hists").innerHTML = table(
+    [["metric"], ["count", "num"], ["mean", "num"], ["distribution (≤bound: n)"]],
+    hists.map(([name, h]) => {
+      const mean = h.count ? h.sum / h.count : 0;
+      const dist = (h.buckets || [])
+        .map(([le, n]) => `≤${le}: ${n}`).join("   ");
+      return [[esc(name)], [fmt(h.count), "num"], [fmt(mean), "num"],
+        [`<span style="color:var(--ink-2)">${esc(dist)}</span>`]];
     }));
   try {
     const ev = await (await fetch(`events?since=${cursor}`)).json();

@@ -31,12 +31,65 @@ import threading
 import time
 from typing import Any, Callable, Iterable
 
-__all__ = ["Telemetry", "TraceWriter", "read_trace"]
+__all__ = ["Histogram", "Telemetry", "TraceWriter", "read_trace"]
 
 # Default capacity of the event ring: enough for the full lifecycle of a
 # long service run (events are per state change, not per item), bounded so
 # an immortal pool can never grow host memory.
 EVENT_RING_SLOTS = 1024
+
+# Fixed bucket grids per histogram family, chosen here once so every
+# producer observes into the same boundaries (upper bounds, inclusive —
+# Prometheus ``le`` semantics; an implicit +Inf bucket closes each grid).
+HISTOGRAM_BUCKETS: dict[str, tuple[float, ...]] = {
+    # Dispatch-to-completion per item (WORK_BATCH send to result/ack).
+    "item_latency_ms": (1, 2.5, 5, 10, 25, 50, 100, 250, 500,
+                        1000, 2500, 5000, 10000),
+    # Items per RESULT_BATCH frame (how well the flusher coalesces).
+    "result_batch_items": (1, 2, 4, 8, 16, 32, 64, 128, 256),
+    # Broadcast-block chunk sizes served (host or peer side).
+    "block_chunk_bytes": (1 << 12, 1 << 14, 1 << 16, 1 << 18,
+                          1 << 20, 1 << 22, 1 << 24),
+}
+_DEFAULT_BUCKETS = (0.1, 1.0, 10.0, 100.0, 1000.0, 10000.0)
+
+
+class Histogram:
+    """A fixed-bucket cumulative histogram (Prometheus-style).
+
+    Buckets are per-family upper bounds; ``counts[i]`` is the number of
+    observations ``<= bounds[i]`` *in that bucket only* (the snapshot and
+    exposition cumulate).  Mutation is lock-free per instance — callers go
+    through :meth:`Telemetry.observe`, which serializes under the bus lock.
+    """
+
+    __slots__ = ("bounds", "counts", "count", "sum")
+
+    def __init__(self, bounds: tuple[float, ...]):
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)  # +1: the +Inf bucket
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, value: float) -> None:
+        i = 0
+        for i, bound in enumerate(self.bounds):
+            if value <= bound:
+                break
+        else:
+            i = len(self.bounds)
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += value
+
+    def snapshot(self) -> dict:
+        """Cumulative view: [[le, count_le], ...] plus count and sum."""
+        cum, buckets = 0, []
+        for bound, n in zip(self.bounds, self.counts):
+            cum += n
+            buckets.append([bound, cum])
+        return {"buckets": buckets, "count": self.count,
+                "sum": round(self.sum, 6)}
 
 
 class TraceWriter:
@@ -122,6 +175,7 @@ class Telemetry:
         self._jobs: dict[int, dict] = {}
         self._nodes: dict[str, dict] = {}
         self._counters: dict[str, float] = {}
+        self._histograms: dict[str, Histogram] = {}
         # Pull-side sampler callbacks (all optional):
         #   nodes()   -> {node_id: {field: value, ...}} merged per node
         #   cluster() -> {counter: value} merged into the cluster section
@@ -177,6 +231,17 @@ class Telemetry:
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + n
 
+    def observe(self, name: str, value: float) -> None:
+        """Record one observation into the named histogram (created on
+        first use with its family's bucket grid)."""
+        with self._lock:
+            hist = self._histograms.get(name)
+            if hist is None:
+                hist = Histogram(
+                    HISTOGRAM_BUCKETS.get(name, _DEFAULT_BUCKETS))
+                self._histograms[name] = hist
+            hist.observe(float(value))
+
     def set_sampler(self, name: str, fn: Callable[[], dict]) -> None:
         """Register a pull-side sampler (``"nodes"``, ``"cluster"``,
         ``"timing"`` or ``"chaos"``) — invoked on every snapshot, on the
@@ -213,6 +278,8 @@ class Telemetry:
             jobs = {str(jid): dict(g) for jid, g in self._jobs.items()}
             nodes = {nid: dict(f) for nid, f in self._nodes.items()}
             counters = dict(self._counters)
+            histograms = {name: h.snapshot()
+                          for name, h in self._histograms.items()}
             seq, dropped = self._seq, self._dropped
         for nid, fields in sampled_nodes.items():
             nodes[nid] = _deep_merge(nodes.get(nid, {}), fields)
@@ -233,6 +300,8 @@ class Telemetry:
             "nodes": nodes,
             "events": {"next": seq, "dropped": dropped},
         }
+        if histograms:
+            snap["histograms"] = histograms
         if timing:
             snap["timing"] = timing
         if chaos:
@@ -300,6 +369,16 @@ class Telemetry:
             for labels, value in sorted(families[family]):
                 value_s = f"{value:g}"
                 lines.append(f"{family}{labels} {value_s}")
+        hists = snap.get("histograms") or {}
+        for name in sorted(hists):
+            h = hists[name]
+            family = f"repro_{name}"
+            lines.append(f"# TYPE {family} histogram")
+            for le, cum in h["buckets"]:
+                lines.append(f'{family}_bucket{{le="{le:g}"}} {cum}')
+            lines.append(f'{family}_bucket{{le="+Inf"}} {h["count"]}')
+            lines.append(f"{family}_sum {h['sum']:g}")
+            lines.append(f"{family}_count {h['count']}")
         return "\n".join(lines) + "\n"
 
     def close(self) -> None:

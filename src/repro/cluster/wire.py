@@ -86,6 +86,17 @@ DEFAULT_HEARTBEAT_S = 0.2
 # Guards against a corrupt length field consuming the heap.
 MAX_FRAME_BYTES = 512 * 2**20
 
+# Broadcast blocks travel as fixed-size chunks so N nodes can stripe their
+# fetches (each asks the host for a disjoint subset, then peers trade the
+# rest).  1 MiB keeps any single BLOCK_CHUNK frame well under the socket
+# buffer while amortising the per-frame header.
+BLOCK_CHUNK_BYTES = 1 << 20
+
+# Complete blocks an individual node keeps resident, LRU-evicted like the
+# warm code cache: enough for a weights blob plus a few lookup tables, small
+# enough that an immortal pool node cannot grow without bound.
+BLOCK_CACHE_SLOTS = 8
+
 _HEADER = struct.Struct("!4sBBBBII")
 
 # How deep the socket's buffered reader reads ahead: one recv syscall
@@ -104,6 +115,12 @@ class FrameType(enum.IntEnum):
     WORK_BATCH = 8  # HNL -> NL: up to `credits` work objects in one frame
     RESULT_BATCH = 9  # NL -> HNL: coalesced results + piggybacked credits
     JOB_CLOSE = 10  # HNL -> NL: job finished/failed — drop its bindings
+    REPORT = 11  # NL -> HNL: node telemetry push (load network, off-beat)
+    ITEM_ACK = 12  # NL -> HNL: peer-forwarded item ids + piggybacked credits
+    PEER_ITEMS = 13  # NL -> NL: stage-s results shipped directly as s+1 work
+    PEER_HELLO = 14  # NL -> NL: data-plane handshake (sender's node id)
+    BLOCK_REQUEST = 15  # NL -> HNL/NL: ask for one chunk of a published block
+    BLOCK_CHUNK = 16  # HNL/NL -> NL: one block chunk (data=None on a miss)
 
 
 class _CodecId(enum.IntEnum):

@@ -194,6 +194,12 @@ class Stage:
     # given to the runtime (HostLoader prefetch / flush_interval).
     prefetch: int | None = None
     flush_ms: float | None = None
+    # How this stage receives its input hop: None/"host" relays through the
+    # host, "peer" ships node-to-node (key_fn turns the hop into a keyed
+    # shuffle).  Only meaningful on the cluster/service backends; the
+    # threads backend ignores routing (it has no wire).
+    route: str | None = None
+    key_fn: Callable[[Any], Any] | None = None
 
     def to_network(self) -> StageNetwork:
         w = self.workers_per_node
@@ -207,6 +213,8 @@ class Stage:
             ),
             prefetch=self.prefetch,
             flush_ms=self.flush_ms,
+            route=self.route,
+            key_fn=self.key_fn,
         )
 
 
@@ -342,6 +350,43 @@ class PipelineSpec:
                 raise TypeError(
                     f"stage {st.name!r}: group function must be callable"
                 )
+        for s, st in enumerate(self.stages):
+            route = getattr(st, "route", None)
+            if route not in (None, "host", "peer"):
+                raise ValueError(
+                    f"stage {st.name!r}: route must be None, 'host' or "
+                    f"'peer', got {route!r}"
+                )
+            key_fn = getattr(st, "key_fn", None)
+            if key_fn is not None and route != "peer":
+                raise ValueError(
+                    f"stage {st.name!r}: key_fn only applies to "
+                    "route='peer' hops"
+                )
+            if key_fn is not None and not callable(key_fn):
+                raise TypeError(
+                    f"stage {st.name!r}: key_fn must be callable"
+                )
+            if route == "peer" and s == 0:
+                raise ValueError(
+                    f"stage {st.name!r}: the first stage cannot use "
+                    "route='peer' — its input comes from the host-side "
+                    "emit, which has no peer edge"
+                )
+
+    def peer_routed_hops(self) -> dict[int, dict]:
+        """Source stage -> hop descriptor for every ``route='peer'`` hop.
+
+        Keyed by the *sending* stage ``s`` (the hop ``s -> s+1``); the
+        ``route`` knob itself sits on the receiving stage.  The runtime
+        builds routing tables from this, ``verify_spec`` the peer-channel
+        model.
+        """
+        hops: dict[int, dict] = {}
+        for s1, st in enumerate(self.stages):
+            if getattr(st, "route", None) == "peer":
+                hops[s1 - 1] = {"key_fn": getattr(st, "key_fn", None)}
+        return hops
 
     # -- convenience constructor ---------------------------------------------
 
@@ -406,6 +451,8 @@ class Pipeline:
         name: str | None = None,
         prefetch: int | None = None,
         flush_ms: float | None = None,
+        route: str | None = None,
+        key_fn: Callable[[Any], Any] | None = None,
     ) -> "Pipeline":
         if self._collect is not None:
             raise ValueError("stage() must precede collect()")
@@ -418,9 +465,24 @@ class Pipeline:
             raise ValueError(f"stage {name!r}: prefetch must be >= 0")
         if flush_ms is not None and flush_ms < 0:
             raise ValueError(f"stage {name!r}: flush_ms must be >= 0")
+        if route not in (None, "host", "peer"):
+            raise ValueError(
+                f"stage {name!r}: route must be None, 'host' or 'peer', "
+                f"got {route!r}"
+            )
+        if key_fn is not None and route != "peer":
+            raise ValueError(
+                f"stage {name!r}: key_fn only applies to route='peer' hops"
+            )
+        if route == "peer" and not self._stages:
+            raise ValueError(
+                f"stage {name!r}: the first stage cannot use route='peer' — "
+                "its input comes from the host-side emit"
+            )
         self._stages.append(
             Stage(name=name, fn=fn, nclusters=nodes, workers_per_node=workers,
-                  prefetch=prefetch, flush_ms=flush_ms)
+                  prefetch=prefetch, flush_ms=flush_ms, route=route,
+                  key_fn=key_fn)
         )
         return self
 

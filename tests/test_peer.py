@@ -1,0 +1,392 @@
+"""The peer data plane (repro.cluster.peer) and its control-plane half.
+
+Units cover the routing table (round-robin and keyed preference orders,
+process-stable hashing), the broadcast-block registry/store pair (chunk
+assembly, digest rejection, LRU bound), and the DSL/route validation
+surface.  The CSP section re-runs Listing 3's assertions over peer-routed
+pipeline wirings — a peer hop is a channel rename, so the state space must
+not change — and checks that an ill-formed (cyclic) route is rejected
+before exploration.  The e2e section boots real ClusterService pools over
+an InProcessLauncher and holds the acceptance invariants: zero payload
+bytes relayed through the host on a peer hop, exact results under keyed
+shuffle and under a mid-run node kill, and broadcast blocks arriving with
+at least one chunk traded between peers.
+"""
+
+import time
+
+import pytest
+
+from repro.cluster import peer
+from repro.cluster.deploy.inprocess import InProcessLauncher
+from repro.cluster.service import ClusterService
+from repro.cluster.wire import dumps_code
+from repro.core.dsl import Pipeline
+from repro.core.processes import EmitDetails, ResultDetails
+from repro.core.protocol import normalize_routes
+from repro.core.verify import verify_pipeline
+
+FAST = dict(heartbeat_interval=0.1, heartbeat_misses=4)
+
+
+def _range_emit(n):
+    return EmitDetails(
+        name="range",
+        init=lambda limit: (0, limit),
+        init_data=(n,),
+        create=lambda s: (None, s) if s[0] >= s[1] else (s[0], (s[0] + 1, s[1])),
+    )
+
+
+def _list_collect():
+    return ResultDetails(name="list", init=lambda: [],
+                         collect=lambda a, x: a + [x], finalise=sorted)
+
+
+def _service(**kw):
+    kw.setdefault("nodes", 3)
+    kw.setdefault("workers", 2)
+    kw.setdefault("launcher", InProcessLauncher())
+    for k, v in FAST.items():
+        kw.setdefault(k, v)
+    return ClusterService(**kw)
+
+
+def _two_stage(n, *, route="peer", key_fn=None, stage1=None):
+    """range -> double (2x2) -> +1 (1x1, the routed hop) -> sorted list."""
+
+    def double(x):
+        return x * 2
+
+    return (Pipeline(host="127.0.0.1")
+            .emit(_range_emit(n))
+            .stage(double, nodes=2, workers=2, name="double")
+            .stage(stage1 or _plus_one, nodes=1, workers=1, name="plus",
+                   route=route, key_fn=key_fn)
+            .collect(_list_collect())
+            .build())
+
+
+# Module-level so resubmits would digest-match; also keeps the closures
+# the specs pickle small.
+def _plus_one(x):
+    return x + 1
+
+
+def _slow_plus_one(x):
+    time.sleep(0.004)
+    return x + 1
+
+
+# ---------------------------------------------------------------------------
+# routing units
+# ---------------------------------------------------------------------------
+
+
+def test_stable_hash_deterministic_and_typed():
+    for key in (0, -7, "band", b"raw", 3.5, None, True, (1, "a"), [2, 3]):
+        assert peer.stable_hash(key) == peer.stable_hash(key)
+    # bool must not collide with int 1 (both hash() to 1 in builtin terms)
+    assert peer.stable_hash(True) != peer.stable_hash(1)
+    assert peer.stable_hash("1") != peer.stable_hash(1)
+    assert 0 <= peer.stable_hash("x") < 2 ** 64
+
+
+def test_route_table_round_robin_rotates_preference():
+    rt = peer.RouteTable({"1": {"targets": ["a", "b", "c"], "mode": "rr",
+                               "key_fn": None}})
+    assert rt.has(1) and not rt.has(0)
+    orders = [rt.targets_for(1, object()) for _ in range(4)]
+    # every call returns ALL targets (fallback walk), head rotating
+    assert all(sorted(o) == ["a", "b", "c"] for o in orders)
+    assert [o[0] for o in orders] == ["a", "b", "c", "a"]
+
+
+def test_route_table_keyed_pins_by_stable_hash():
+    blob = dumps_code(lambda v: v % 4)
+    rt = peer.RouteTable({"2": {"targets": ["a", "b"], "mode": "keyed",
+                               "key_fn": blob}})
+    # same key -> same preference order, every time
+    first = rt.targets_for(2, 5)
+    assert all(rt.targets_for(2, 5) == first for _ in range(5))
+    # the order is the full list, so a dead primary degrades to the next
+    assert sorted(first) == ["a", "b"]
+    assert first[0] == rt.targets_for(2, 9)[0]  # 5 % 4 == 9 % 4
+
+
+def test_route_table_empty_and_unknown_stage():
+    rt = peer.RouteTable({})
+    assert rt.targets_for(0, 1) == []
+    assert not rt.has(0)
+
+
+def test_partition_seam_round_trip():
+    try:
+        assert not peer.is_partitioned("nodeX")
+        peer.partition_node("nodeX", duration_s=30.0)
+        assert peer.is_partitioned("nodeX")
+        assert peer.is_partitioned("nodeY", "nodeX")
+    finally:
+        peer.heal_partitions()
+    assert not peer.is_partitioned("nodeX")
+
+
+# ---------------------------------------------------------------------------
+# broadcast block units
+# ---------------------------------------------------------------------------
+
+
+def test_block_registry_publish_idempotent_immutable():
+    reg = peer.BlockRegistry()
+    data = b"w" * 100
+    digest = reg.publish("weights", data)
+    assert reg.publish("weights", data) == digest  # same bytes: fine
+    with pytest.raises(ValueError, match="different content"):
+        reg.publish("weights", b"x" * 100)
+    (entry,) = reg.manifest()
+    assert entry == {"name": "weights", "digest": digest,
+                     "size": 100, "nchunks": 1}
+    assert reg.get_chunk("weights", 0) == data
+    assert reg.get_chunk("weights", 1) is None
+    assert reg.get_chunk("nope", 0) is None
+
+
+def test_block_store_assembles_chunks_and_verifies_digest():
+    reg = peer.BlockRegistry()
+    # >1 chunk so assembly order and indexing actually matter
+    data = bytes(range(256)) * ((peer.BLOCK_CHUNK_BYTES * 2) // 256 + 1)
+    reg.publish("big", data)
+    (entry,) = reg.manifest()
+    assert entry["nchunks"] == 3
+
+    store = peer.BlockStore()
+    assert store.expect(entry)
+    assert store.missing("big") == [0, 1, 2]
+    # out-of-order, with a duplicate — both idempotent
+    for idx in (2, 0, 0, 1):
+        store.add_chunk("big", idx, reg.get_chunk("big", idx), from_peer=idx == 1)
+    assert store.wait("big", timeout=5.0) == data
+    assert store.missing("big") == []
+    assert not store.expect(entry)  # already resident: nothing to fetch
+    c = store.counters()
+    assert c["blocks_fetched_from_peers"] == 1
+    assert c["blocks_fetched_from_host"] == 2
+    # resident blocks serve chunks to peers
+    assert store.get_chunk("big", 2) == reg.get_chunk("big", 2)
+
+
+def test_block_store_drops_corrupt_assembly_for_retry():
+    reg = peer.BlockRegistry()
+    reg.publish("blk", b"a" * 50)
+    (entry,) = reg.manifest()
+    store = peer.BlockStore()
+    store.expect(entry)
+    store.add_chunk("blk", 0, b"b" * 50)  # right size, wrong bytes
+    assert not store.has("blk")
+    assert store.digest_failures == 1
+    assert store.missing("blk") == [0]  # retryable
+    store.add_chunk("blk", 0, b"a" * 50)
+    assert store.wait("blk", timeout=5.0) == b"a" * 50
+
+
+def test_block_store_lru_bound():
+    store = peer.BlockStore(slots=2)
+    reg = peer.BlockRegistry()
+    for i in range(3):
+        reg.publish(f"b{i}", bytes([i]) * 10)
+    for entry in reg.manifest():
+        store.expect(entry)
+        store.add_chunk(entry["name"], 0, reg.get_chunk(entry["name"], 0))
+    assert not store.has("b0")  # evicted
+    assert store.has("b1") and store.has("b2")
+
+
+# ---------------------------------------------------------------------------
+# DSL + route validation
+# ---------------------------------------------------------------------------
+
+
+def test_dsl_rejects_bad_route_values():
+    p = Pipeline(host="127.0.0.1").emit(_range_emit(4))
+    with pytest.raises(ValueError, match="route must be"):
+        p.stage(_plus_one, route="udp")
+    with pytest.raises(ValueError, match="key_fn only applies"):
+        p.stage(_plus_one, key_fn=lambda v: v)
+    with pytest.raises(ValueError, match="first stage cannot"):
+        p.stage(_plus_one, route="peer")
+
+
+def test_peer_routed_hops_maps_receiving_stage_to_source_hop():
+    spec = _two_stage(4, key_fn=None)
+    assert set(spec.peer_routed_hops()) == {0}
+    spec = _two_stage(4, route=None)
+    assert spec.peer_routed_hops() == {}
+
+
+def test_normalize_routes_accepts_adjacent_and_rejects_cyclic():
+    assert normalize_routes([0, 1], nstages=3) == frozenset({0, 1})
+    assert normalize_routes({0: 1}, nstages=2) == frozenset({0})
+    assert normalize_routes(None, nstages=2) == frozenset()
+    with pytest.raises(ValueError, match="cyclic peer route"):
+        normalize_routes({1: 0}, nstages=3)
+    with pytest.raises(ValueError, match="cyclic peer route"):
+        normalize_routes({1: 1}, nstages=3)
+    with pytest.raises(ValueError, match="skips"):
+        normalize_routes({0: 2}, nstages=3)
+    with pytest.raises(ValueError):
+        normalize_routes([5], nstages=2)  # out of range
+
+
+# ---------------------------------------------------------------------------
+# CSP verification of peer-routed wirings
+# ---------------------------------------------------------------------------
+
+
+def test_verify_peer_routed_pipeline_all_assertions():
+    """A peer hop reroutes the rendezvous but not the protocol: the full
+    Listing-3 battery must hold over the decentralised wiring."""
+    report = verify_pipeline([(2, 1), (1, 1)], 3, routes=[0])
+    assert report.deadlock_free, report.summary()
+    assert report.divergence_free, report.summary()
+    assert report.terminates, report.summary()
+    assert report.objects_delivered_exactly_once, report.summary()
+    assert report.ok
+
+
+def test_verify_peer_hop_is_a_channel_rename():
+    """Same topology host-routed vs peer-routed: the hop rename must
+    preserve the state space exactly (it relabels, never reorders)."""
+    host = verify_pipeline([(2, 1), (1, 1)], 3)
+    peered = verify_pipeline([(2, 1), (1, 1)], 3, routes=[0])
+    assert peered.num_states == host.num_states
+    assert peered.num_transitions == host.num_transitions
+
+
+def test_verify_keyed_shuffle_composition():
+    """Three stages, both hops peer-routed (the keyed-shuffle shape: the
+    key only picks *which* target, which the finitised model abstracts
+    as the hop channel) — still deadlock/livelock free and exactly-once."""
+    report = verify_pipeline([(2, 1), (2, 1), (1, 1)], 2, routes=[0, 1])
+    assert report.ok, report.summary()
+
+
+def test_verify_rejects_cyclic_peer_route_before_exploring():
+    with pytest.raises(ValueError, match="cyclic peer route"):
+        verify_pipeline([(2, 1), (1, 1), (1, 1)], 2, routes={1: 0})
+
+
+# ---------------------------------------------------------------------------
+# e2e: peer-routed jobs on a live pool
+# ---------------------------------------------------------------------------
+
+
+def test_peer_hop_relays_zero_payload_bytes_through_host():
+    n = 40
+    with _service() as svc:
+        h = svc.submit(_two_stage(n), timeout=60)
+        assert h.result() == sorted(2 * i + 1 for i in range(n))
+        st = h.stats()
+        assert st["peer_forwarded"] == n
+        assert st["host_relay_bytes"] == 0
+        assert st["duplicates_dropped"] == 0
+    assert svc.orphaned() == []
+
+
+def test_host_routed_hop_still_relays_and_counts_bytes():
+    """The control: same pipeline without route='peer' moves every hop
+    payload through the host, and the counter says so."""
+    n = 20
+    with _service() as svc:
+        h = svc.submit(_two_stage(n, route=None), timeout=60)
+        assert h.result() == sorted(2 * i + 1 for i in range(n))
+        st = h.stats()
+        assert st["peer_forwarded"] == 0
+        assert st["host_relay_bytes"] > 0
+    assert svc.orphaned() == []
+
+
+def test_keyed_shuffle_partitions_and_matches():
+    n = 30
+    with _service() as svc:
+        h = svc.submit(_two_stage(n, key_fn=lambda v: v % 4), timeout=60)
+        assert h.result() == sorted(2 * i + 1 for i in range(n))
+        st = h.stats()
+        assert st["peer_forwarded"] == n
+        assert st["host_relay_bytes"] == 0
+    assert svc.orphaned() == []
+
+
+def test_kill_peer_target_mid_run_exactly_once():
+    """Killing a node that receives peer-forwarded items mid-run: the host
+    requeues its peer-ledger items upstream under the same ids, survivors
+    recompute, and dedup keeps delivery exactly-once."""
+    n = 80
+    with _service(nodes=3, workers=1) as svc:
+        h = svc.submit(_two_stage(n, stage1=_slow_plus_one), timeout=120)
+        hl = svc.host_loader
+        deadline = time.monotonic() + 30
+        while hl.stats.items_total < 5:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        svc.kill_node("node2")
+        assert h.result() == sorted(2 * i + 1 for i in range(n))
+        assert hl.stats.deaths_detected == 1
+        st = h.stats()
+        assert st["items_collected"] == n
+        assert st["host_relay_bytes"] == 0
+    assert svc.orphaned() == []
+
+
+def test_broadcast_block_readable_in_work_fn_and_peer_fetched():
+    """publish_block before submit: every node assembles the block (host
+    stripe + peer trades), and the work function reads it by name."""
+    data = bytes(range(256)) * 64  # 16 KiB, still multi-node relevant
+    n = 12
+
+    def scaled(x):
+        blob = peer.get_block("peer-test-weights", timeout=30.0)
+        return x * len(blob)
+
+    with _service() as svc:
+        digest = svc.publish_block("peer-test-weights", data)
+        assert digest == peer.block_digest(data)
+        spec = _two_stage(n, stage1=scaled)
+        h = svc.submit(spec, timeout=60)
+        assert h.result() == sorted(2 * i * len(data) for i in range(n))
+        # The stripe fetches run concurrently with the job and their REPORT
+        # can land a beat after result() — poll briefly for the counters.
+        deadline = time.monotonic() + 5.0
+        fetched = 0
+        while time.monotonic() < deadline:
+            snap = svc.metrics_snapshot()
+            reports = [v.get("report") or {} for v in snap["nodes"].values()]
+            fetched = sum(r.get("blocks_fetched_from_peers", 0) +
+                          r.get("blocks_fetched_from_host", 0)
+                          for r in reports)
+            if fetched >= svc.nodes:
+                break
+            time.sleep(0.02)
+        # every node had to pull the block over the wire
+        assert fetched >= 1
+    assert svc.orphaned() == []
+
+
+def test_report_frames_keep_gauges_fresh_without_heartbeat():
+    """Satellite invariant: node gauges ride dedicated REPORT frames pushed
+    on result activity, so with a glacial heartbeat the host still sees
+    fresh per-node peer counters right after a job completes."""
+    n = 20
+    with _service(heartbeat_interval=30.0, heartbeat_misses=4) as svc:
+        h = svc.submit(_two_stage(n), timeout=60)
+        assert h.result() == sorted(2 * i + 1 for i in range(n))
+        deadline = time.monotonic() + 2.0  # << one 30s heartbeat
+        while time.monotonic() < deadline:
+            snap = svc.metrics_snapshot()
+            reports = [v.get("report") or {}
+                       for v in snap["nodes"].values()]
+            if sum(r.get("peer_items_sent", 0) for r in reports) >= n:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("peer gauges never arrived ahead of the heartbeat")
+    assert svc.orphaned() == []

@@ -200,6 +200,33 @@ def test_prometheus_golden():
     assert got == expected
 
 
+def test_histogram_buckets_cumulate_and_expose():
+    t = Telemetry(clock=lambda: 0.0)
+    assert "histograms" not in t.snapshot()  # absent until first observe
+    for v in (1, 2, 3, 5, 300):  # 300 overflows the largest bound (256)
+        t.observe("result_batch_items", v)
+    h = t.snapshot()["histograms"]["result_batch_items"]
+    assert h["count"] == 5 and h["sum"] == 311
+    cum = dict((le, n) for le, n in h["buckets"])
+    # cumulative ``le`` semantics: <=1 is 1 obs; <=2 is 2; <=4 adds the 3;
+    # <=8 adds the 5; the 300 only shows up in +Inf (count).
+    assert cum[1.0] == 1 and cum[2.0] == 2 and cum[4.0] == 3
+    assert cum[8.0] == 4 and cum[256.0] == 4
+    prom = t.prometheus()
+    assert "# TYPE repro_result_batch_items histogram" in prom
+    assert 'repro_result_batch_items_bucket{le="4"} 3' in prom
+    assert 'repro_result_batch_items_bucket{le="+Inf"} 5' in prom
+    assert "repro_result_batch_items_sum 311" in prom
+    assert "repro_result_batch_items_count 5" in prom
+
+
+def test_histogram_unknown_family_gets_default_grid():
+    t = Telemetry(clock=lambda: 0.0)
+    t.observe("made_up_metric", 0.05)
+    h = t.snapshot()["histograms"]["made_up_metric"]
+    assert h["buckets"][0] == [0.1, 1]  # default grid starts at 0.1
+
+
 def test_trace_jsonl_round_trip(tmp_path):
     path = str(tmp_path / "run.jsonl")
     t = Telemetry(trace_path=path, clock=lambda: 7.0)
