@@ -169,14 +169,16 @@ class JobState:
         # source stage -> {"key_fn": ...}.  On such a hop the host only
         # *ledgers* the transfer: an ITEM_ACK moves the item into
         # ``peer_inflight[s+1]``, keyed by the stage-s result id and
-        # holding (target node, the stage-s INPUT object) so a dead
-        # target's items can be recomputed upstream — the result value
-        # itself never transits the host.
+        # holding (target node, input object, input stage).  The input is
+        # the LAST one the host actually saw for this item — on a chain of
+        # consecutive peer hops the intermediate results never transit the
+        # host, so a dead target's item is recomputed from that stage
+        # (``input stage``), not necessarily from ``s``.
         self.peer_hops: dict[int, dict] = (
             spec.peer_routed_hops()
             if hasattr(spec, "peer_routed_hops") else {}
         )
-        self.peer_inflight: list[dict[int, tuple[str, Any]]] = [
+        self.peer_inflight: list[dict[int, tuple[str, Any, int]]] = [
             {} for _ in range(S)]
         # WORK_BATCH send time per (stage, item id): the item-latency
         # histogram observes completion-minus-dispatch.
@@ -763,11 +765,15 @@ class HostLoader:
         """A stage-s node shipped results directly to stage-s+1 peers and
         acked the ids: advance the exactly-once ledger without the values.
 
-        Each acked item moves from ``inflight[s]`` into
-        ``peer_inflight[s+1]`` (target node, stage-s INPUT) so a death of
-        the target re-computes it upstream.  Credits piggyback exactly as
-        on a RESULT_BATCH (the sender already excluded peer-delivered
-        inputs, which never consumed a window slot).
+        Each acked item moves into ``peer_inflight[s+1]`` — from
+        ``inflight[s]`` when its stage-s input was host-dispatched, or
+        from ``peer_inflight[s]`` when the input itself arrived over a
+        peer edge (two consecutive ``route="peer"`` hops).  The ledger
+        entry carries the last input the host saw and its stage, so a
+        death of the target re-computes the item from that stage.
+        Credits piggyback exactly as on a RESULT_BATCH (the sender
+        already excluded peer-delivered inputs, which never consumed a
+        window slot).
         """
         self.stats.item_acks += 1
         job = self._jobs.get(job_id)
@@ -783,6 +789,10 @@ class HostLoader:
             if not 0 <= s < job.S - 1:
                 continue  # malformed: the last stage has no peer hop
             entry = job.inflight[s].pop(rid, None)
+            # Chained peer hop: the stage-s input was itself delivered by
+            # a peer, so the live ledger entry sits in peer_inflight[s].
+            pentry = (job.peer_inflight[s].pop(rid, None)
+                      if entry is None else None)
             t0 = job.dispatch_ts.pop((s, rid), None)
             if t0 is not None:
                 self.telemetry.observe(
@@ -791,21 +801,29 @@ class HostLoader:
                 self.stats.duplicates_dropped += 1
                 job.duplicates_dropped += 1
                 continue
-            if entry is None:
+            if entry is None and pentry is None:
                 # A stale ack: the host already requeued this item (its
                 # first peer target died) — the requeued copy is
                 # authoritative, and marking this one done would lose it.
                 continue
-            _, input_obj = entry
+            if entry is not None:
+                _, input_obj = entry
+                in_s = s  # the host dispatched stage s's input itself
+            else:
+                _, input_obj, in_s = pentry
             trec = self.membership.nodes.get(target) if target else None
             if rid not in job.done_ids[s + 1] and (
                     trec is None or not trec.alive):
                 # Ack-after-death race: the copy was shipped into a node
                 # the host has already reaped (so _requeue_node_items
                 # never saw this ledger entry) and nothing downstream
-                # delivered it — it is lost.  Recompute upstream under
-                # the same id, exactly as the stranded-ledger path does.
-                job.pending[s].append((rid, input_obj))
+                # delivered it — it is lost.  Recompute from the last
+                # stage the host holds an input for, exactly as the
+                # stranded-ledger path does; the done marks of the
+                # replayed hops must lift or dedup would eat the redo.
+                for t in range(in_s, s):
+                    job.done_ids[t].discard(rid)
+                job.pending[in_s].append((rid, input_obj))
                 self.stats.redispatched += 1
                 self.stats.peer_redispatched += 1
                 continue
@@ -816,7 +834,7 @@ class HostLoader:
             # not already completed it, or it would sit in peer_inflight
             # forever and stall termination.
             if rid not in job.done_ids[s + 1]:
-                job.peer_inflight[s + 1][rid] = (target, input_obj)
+                job.peer_inflight[s + 1][rid] = (target, input_obj, in_s)
             self.stats.forwarded += 1
             self.stats.peer_forwarded += 1
             job.forwarded += 1
@@ -840,7 +858,13 @@ class HostLoader:
         for rec in self.membership.nodes.values():
             if not rec.alive or not rec.peer_port:
                 continue
-            ip = rec.address.split(":", 1)[0] if rec.address else "127.0.0.1"
+            # The observed address is "ip:port"; split from the RIGHT and
+            # strip any brackets so an IPv6 ip ("::1:54321", "[::1]:54321")
+            # survives — a left split would truncate it to "" and silently
+            # demote every peer edge to host relay.
+            ip = "127.0.0.1"
+            if rec.address:
+                ip = rec.address.rsplit(":", 1)[0].strip("[]") or ip
             out[rec.node_id] = (ip, rec.peer_port)
         return out
 
@@ -970,10 +994,11 @@ class HostLoader:
 
         Host-dispatched in-flight items re-enter their own stage's queue.
         Peer-shipped items stranded on the node are *recomputed* upstream:
-        the host ledgers only the stage-s input of a peer hop, so the
-        stage-s result id is un-done and the item re-dispatched at stage s
-        under the same id — the dedup set at s+1 absorbs any racing late
-        delivery from the first computation.
+        the ledger holds the last input the host saw (on a chain of
+        consecutive peer hops that can be several stages back), so the
+        replayed hops' result ids are un-done and the item re-dispatched
+        at the input's stage under the same id — the dedup sets absorb
+        any racing late delivery from the first computation.
         """
         requeued = False
         for job in self._jobs.values():
@@ -987,13 +1012,14 @@ class HostLoader:
                     job.pending[s].append((iid, obj))
                     self.stats.redispatched += 1
                     requeued = True
-                stranded = [rid for rid, (nid, _)
+                stranded = [rid for rid, (nid, _, _)
                             in job.peer_inflight[s].items()
                             if nid == node_id]
                 for rid in stranded:
-                    _, obj = job.peer_inflight[s].pop(rid)
-                    job.done_ids[s - 1].discard(rid)
-                    job.pending[s - 1].append((rid, obj))
+                    _, obj, in_s = job.peer_inflight[s].pop(rid)
+                    for t in range(in_s, s):
+                        job.done_ids[t].discard(rid)
+                    job.pending[in_s].append((rid, obj))
                     self.stats.redispatched += 1
                     self.stats.peer_redispatched += 1
                     requeued = True

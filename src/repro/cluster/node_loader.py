@@ -83,6 +83,14 @@ from repro.cluster.wire import (
 # stay invisible next to the result traffic itself.
 REPORT_MIN_INTERVAL_S = 0.05
 
+# Peer-delivered items a node holds locally (queued for workers + parked
+# for a late stage binding) before its peer-serve readers stop draining
+# their sockets.  Host-dispatched work is bounded by the credit window;
+# this is the peer plane's equivalent bound — once full, the reader
+# blocks, the kernel buffers fill, and TCP throttles the upstream sender
+# instead of this node's queue growing without bound.
+PEER_INTAKE_MAX_ITEMS = 256
+
 # AOT-serialized executables shipped in the LOAD payload, keyed by name.
 # Work functions may read these (e.g. deserialize_and_load a compiled step).
 ARTIFACTS: dict[str, bytes] = {}
@@ -237,6 +245,7 @@ def run_node(
         stop_beat.set()
         peer_server.close()
         peer_client.close()
+        block_store.release()
         conn.close()
         return {"node_id": node_id, "boot_ms": round(boot_ms, 3),
                 "load_ms": 0.0, "run_ms": 0.0, "items": 0}
@@ -268,6 +277,24 @@ def run_node(
     hold_lock = threading.Lock()
     peer_hold: dict[int, list[dict]] = {}
     last_report = [0.0]
+    # Peer intake accounting: items admitted from the peer plane that the
+    # workers have not consumed yet.  The gate below blocks the peer-serve
+    # reader threads at PEER_INTAKE_MAX_ITEMS (TCP backpressure on the
+    # sender); self-delivery and the pre-handler held drain never block,
+    # so the flusher and the main frame loop cannot deadlock on it.
+    intake_cv = threading.Condition()
+    peer_backlog = [0]
+
+    def peer_intake_gate(n: int) -> None:
+        with intake_cv:
+            while (peer_backlog[0] >= PEER_INTAKE_MAX_ITEMS
+                   and not stop_flush.is_set()):
+                intake_cv.wait(0.05)
+
+    def peer_intake_release(n: int) -> None:
+        with intake_cv:
+            peer_backlog[0] -= n
+            intake_cv.notify_all()
 
     def send_report(force: bool = False) -> None:
         # The dedicated REPORT frame: pushed right after result activity so
@@ -286,6 +313,8 @@ def run_node(
             pass
 
     def on_peer_items(job_id: int, items: list) -> None:
+        with intake_cv:
+            peer_backlog[0] += len(items)
         with hold_lock:
             for item in items:
                 s = int(item.get("s", 0))
@@ -295,6 +324,7 @@ def run_node(
                     peer_hold.setdefault(job_id, []).append(item)
 
     peer_server.set_on_items(on_peer_items)
+    peer_server.set_intake_gate(peer_intake_gate)
 
     def complete(job_id: int, result: dict, urgent: bool = False) -> None:
         with out_lock:
@@ -431,6 +461,8 @@ def run_node(
             # Results remember whether their input arrived from a peer: the
             # flusher returns window credits only for host-dispatched items.
             tag = {"peer": True} if item.get("peer") else {}
+            if tag:
+                peer_intake_release(1)  # consumed: reopen the intake gate
             fn = fns.get((job_id, s))
             if fn is None:
                 # JOB_CLOSE raced ahead of in-flight items: the job is
@@ -646,7 +678,11 @@ def run_node(
                     del fns[key]
                 route_tables.pop(jid, None)
                 with hold_lock:
-                    peer_hold.pop(jid, None)
+                    dropped = peer_hold.pop(jid, None)
+                if dropped:
+                    # Parked items die with their job; their intake slots
+                    # must reopen or the gate leaks capacity.
+                    peer_intake_release(len(dropped))
             frame = None
     except (ConnectionError, OSError, ValueError):
         # Host vanished (mid-recv): there is nobody to deliver to; shut
@@ -665,6 +701,10 @@ def run_node(
     stop_beat.set()
     peer_server.close()
     peer_client.close()
+    # Release resident broadcast blocks: the process-global read mirror is
+    # refcounted per holding store, and an exited node must not pin its
+    # blocks there forever (in-process pools share the mirror).
+    block_store.release()
 
     record = {
         "node_id": node_id,

@@ -82,6 +82,16 @@ def partition_node(node_id: str, duration_s: float = 1.0) -> None:
     share this module, so the chaos controller (host side) can sever edges
     the node-loaders will honour.  Subprocess pools do not see it — the
     chaos fault documents that limitation.
+
+    The cut is enforced on the *send* side only (``PeerClient._link``
+    checks both endpoints before every transfer).  Item frames already in
+    flight when the partition activates are still processed by the
+    receiver: the sender has told the host the transfer succeeded, so a
+    receiver-side drop would strand the item in the exactly-once ledger
+    at a live target and stall the job to its deadline.  Block chunk
+    *requests* answer ``data=None`` under a partition instead — the
+    fetcher treats that as a miss and retries elsewhere, so the stricter
+    behaviour is safe there.
     """
     with _partition_lock:
         _partitioned_until[node_id] = time.monotonic() + duration_s
@@ -251,9 +261,13 @@ class BlockRegistry:
 
 # Process-global published blocks: the read side for work functions.  Under
 # the in-process launcher every node thread shares this dict — harmless,
-# since blocks are immutable and digest-verified.
+# since blocks are immutable and digest-verified.  Entries are refcounted
+# by the BlockStores holding the block resident, and evicted when the last
+# holder's LRU lets go, so this mirror is bounded by the stores' slots and
+# a long-lived warm pool node does not retain every block ever published.
 _global_cv = threading.Condition()
 _global_blocks: dict[str, bytes] = {}
+_global_refs: dict[str, int] = {}
 
 
 def get_block(name: str, timeout: float = 60.0) -> bytes:
@@ -275,7 +289,20 @@ def get_block(name: str, timeout: float = 60.0) -> bytes:
 def _publish_global(name: str, data: bytes) -> None:
     with _global_cv:
         _global_blocks[name] = data
+        _global_refs[name] = _global_refs.get(name, 0) + 1
         _global_cv.notify_all()
+
+
+def _unpublish_global(name: str) -> None:
+    """One holder evicted/released the block; drop the global copy when
+    the last holder is gone."""
+    with _global_cv:
+        refs = _global_refs.get(name, 0) - 1
+        if refs > 0:
+            _global_refs[name] = refs
+        else:
+            _global_refs.pop(name, None)
+            _global_blocks.pop(name, None)
 
 
 class BlockStore:
@@ -345,10 +372,16 @@ class BlockStore:
                 return
             self._partial.pop(name, None)
             self._blocks[name] = blob
+            evicted = []
             while len(self._blocks) > self._slots:
                 old, _ = self._blocks.popitem(last=False)
                 self._meta.pop(old, None)
+                evicted.append(old)
             _publish_global(name, blob)
+            # The global read-side mirror must shrink with the LRU or an
+            # immortal pool node retains every block ever published.
+            for old in evicted:
+                _unpublish_global(old)
             self._cv.notify_all()
 
     def get_chunk(self, name: str, idx: int) -> bytes | None:
@@ -390,6 +423,17 @@ class BlockStore:
                 "block_chunks_served": self.chunks_served,
                 "blocks_resident": len(self._blocks),
             }
+
+    def release(self) -> None:
+        """Drop every resident block and its global refcounts — node
+        shutdown; without this an in-process pool's exited nodes would
+        pin their blocks in the process-global mirror forever."""
+        with self._cv:
+            names, self._blocks = list(self._blocks), OrderedDict()
+            self._meta.clear()
+            self._partial.clear()
+        for name in names:
+            _unpublish_global(name)
 
 
 # ---------------------------------------------------------------------------
@@ -547,6 +591,7 @@ class PeerServer:
         self.port = self._sock.getsockname()[1]
         self._lock = threading.Lock()
         self._on_items: Callable[[int, list], None] | None = None
+        self._intake_gate: Callable[[int], None] | None = None
         self._held: list[tuple[int, list]] = []
         self._conns: list[FrameConnection] = []
         self._closed = False
@@ -559,6 +604,15 @@ class PeerServer:
             held, self._held = self._held, []
         for job_id, items in held:
             fn(job_id, items)
+
+    def set_intake_gate(self, gate: Callable[[int], None]) -> None:
+        """Install a backpressure gate called (with the item count) on the
+        reader thread before each PEER_ITEMS batch is handed over.  A gate
+        that blocks while the node's peer backlog is full stops the socket
+        drain, so the kernel buffers fill and TCP throttles the sender —
+        the peer plane's analogue of the host's credit window."""
+        with self._lock:
+            self._intake_gate = gate
 
     def start(self) -> None:
         threading.Thread(target=self._accept_loop,
@@ -586,16 +640,22 @@ class PeerServer:
                 if frame.ftype is FrameType.PEER_HELLO:
                     sender = frame.payload.get("node_id")
                 elif frame.ftype is FrameType.PEER_ITEMS:
-                    origin = frame.payload.get("from", sender)
                     items = frame.payload.get("items") or []
-                    if is_partitioned(self.node_id, origin):
-                        continue  # the chaos edge eats the frame
+                    # No partition check here: the SENDER gates every
+                    # transfer on is_partitioned (in ``_link``), so a
+                    # frame that reached us was sent before the edge was
+                    # cut and must be processed — eating it would strand
+                    # the item in the host's exactly-once ledger at a
+                    # live target, which no requeue path ever revisits.
                     self.items_recv += len(items)
                     with self._lock:
                         handler = self._on_items
+                        gate = self._intake_gate
                         if handler is None:
                             self._held.append((frame.job_id, items))
                     if handler is not None:
+                        if gate is not None:
+                            gate(len(items))
                         handler(frame.job_id, items)
                 elif frame.ftype is FrameType.BLOCK_REQUEST:
                     name = frame.payload.get("name")

@@ -13,14 +13,24 @@ shuffle and under a mid-run node kill, and broadcast blocks arriving with
 at least one chunk traded between peers.
 """
 
+import socket
+import threading
 import time
 
 import pytest
 
 from repro.cluster import peer
 from repro.cluster.deploy.inprocess import InProcessLauncher
+from repro.cluster.host_loader import HostLoader
+from repro.cluster.netchannels import ChannelClosed
 from repro.cluster.service import ClusterService
-from repro.cluster.wire import dumps_code
+from repro.cluster.wire import (
+    APP_WIRE_CHANNEL,
+    Frame,
+    FrameConnection,
+    FrameType,
+    dumps_code,
+)
 from repro.core.dsl import Pipeline
 from repro.core.processes import EmitDetails, ResultDetails
 from repro.core.protocol import normalize_routes
@@ -78,6 +88,33 @@ def _slow_plus_one(x):
     return x + 1
 
 
+def _double(x):
+    return x * 2
+
+
+def _times_three(x):
+    return x * 3
+
+
+def _slow_times_three(x):
+    time.sleep(0.004)
+    return x * 3
+
+
+def _three_stage(n, *, stage2=None):
+    """range -> double -> +1 (peer hop) -> *3 (a SECOND consecutive peer
+    hop) -> sorted list: the chained-forwarding shape where intermediate
+    values never transit the host at all."""
+    return (Pipeline(host="127.0.0.1")
+            .emit(_range_emit(n))
+            .stage(_double, nodes=2, workers=2, name="double")
+            .stage(_plus_one, nodes=1, workers=1, name="plus", route="peer")
+            .stage(stage2 or _times_three, nodes=1, workers=1, name="tri",
+                   route="peer")
+            .collect(_list_collect())
+            .build())
+
+
 # ---------------------------------------------------------------------------
 # routing units
 # ---------------------------------------------------------------------------
@@ -129,6 +166,70 @@ def test_partition_seam_round_trip():
     finally:
         peer.heal_partitions()
     assert not peer.is_partitioned("nodeX")
+
+
+def test_partition_is_sender_side_only_for_items():
+    """Exactly-once under partition races: the sender refuses new
+    transfers on a cut edge, but a PEER_ITEMS frame that already reached
+    the receiver is processed — the sender has acked it to the host, so
+    eating it would strand the item in a ledger no requeue revisits."""
+    store = peer.BlockStore()
+    server = peer.PeerServer("partRecv", store, bind_host="127.0.0.1")
+    server.start()
+    got: list = []
+    server.set_on_items(lambda jid, items: got.extend(items))
+    client = peer.PeerClient(
+        "partSend", {"partRecv": ("127.0.0.1", server.port)})
+    try:
+        # A raw dialed link stands in for a frame in flight when the
+        # partition activates: it bypasses the client's send-side gate.
+        raw = FrameConnection(
+            socket.create_connection(("127.0.0.1", server.port)))
+        raw.send(Frame(FrameType.PEER_HELLO, {"node_id": "partSend"}))
+        peer.partition_node("partRecv", duration_s=30.0)
+        with pytest.raises(ChannelClosed, match="partitioned"):
+            client.send_items(7, "partRecv", [{"id": 0, "s": 1, "obj": 0}])
+        raw.send(Frame(FrameType.PEER_ITEMS,
+                       {"from": "partSend",
+                        "items": [{"id": 1, "s": 1, "obj": 5}]},
+                       APP_WIRE_CHANNEL, 7))
+        deadline = time.monotonic() + 5.0
+        while not got and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert [i["id"] for i in got] == [1]
+        raw.close()
+    finally:
+        peer.heal_partitions()
+        client.close()
+        server.close()
+
+
+def test_peer_server_intake_gate_applies_backpressure():
+    """The intake gate runs on the reader thread before each PEER_ITEMS
+    hand-off: while it blocks, nothing reaches the handler (the socket
+    stops draining), and releasing it delivers everything in order."""
+    store = peer.BlockStore()
+    server = peer.PeerServer("gateRecv", store, bind_host="127.0.0.1")
+    server.start()
+    got: list = []
+    gate_open = threading.Event()
+    server.set_on_items(lambda jid, items: got.extend(items))
+    server.set_intake_gate(lambda n: gate_open.wait(10.0))
+    client = peer.PeerClient(
+        "gateSend", {"gateRecv": ("127.0.0.1", server.port)})
+    try:
+        client.send_items(1, "gateRecv", [{"id": 0, "s": 1, "obj": 0}])
+        client.send_items(1, "gateRecv", [{"id": 1, "s": 1, "obj": 1}])
+        time.sleep(0.1)
+        assert got == []  # reader parked in the gate, nothing delivered
+        gate_open.set()
+        deadline = time.monotonic() + 5.0
+        while len(got) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert [i["id"] for i in got] == [0, 1]
+    finally:
+        client.close()
+        server.close()
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +300,32 @@ def test_block_store_lru_bound():
         store.add_chunk(entry["name"], 0, reg.get_chunk(entry["name"], 0))
     assert not store.has("b0")  # evicted
     assert store.has("b1") and store.has("b2")
+
+
+def test_block_eviction_and_release_unpin_global_mirror():
+    """The process-global read mirror must shrink with the store LRUs: an
+    eviction (or a node shutdown's release) drops the global copy once the
+    last holding store lets go, so a warm pool node stays bounded."""
+    reg = peer.BlockRegistry()
+    for i in range(3):
+        reg.publish(f"gmb{i}", bytes([i]) * 16)
+    entries = {e["name"]: e for e in reg.manifest()}
+    store = peer.BlockStore(slots=2)
+    for name in ("gmb0", "gmb1", "gmb2"):
+        store.expect(entries[name])
+        store.add_chunk(name, 0, reg.get_chunk(name, 0))
+    # LRU evicted gmb0 from the store AND the global mirror
+    assert not store.has("gmb0")
+    assert "gmb0" not in peer._global_blocks
+    # a second holder keeps the mirror entry alive past the first release
+    store2 = peer.BlockStore()
+    store2.expect(entries["gmb1"])
+    store2.add_chunk("gmb1", 0, reg.get_chunk("gmb1", 0))
+    store.release()
+    assert peer.get_block("gmb1", timeout=1.0) == bytes([1]) * 16
+    assert "gmb2" not in peer._global_blocks  # sole holder released
+    store2.release()
+    assert "gmb1" not in peer._global_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +403,30 @@ def test_verify_rejects_cyclic_peer_route_before_exploring():
 
 
 # ---------------------------------------------------------------------------
+# host control-plane units
+# ---------------------------------------------------------------------------
+
+
+def test_peer_dir_preserves_ipv6_addresses():
+    """The peer directory derives a dialable ip from the node's observed
+    'ip:port' address: the port split must come from the RIGHT (an IPv6
+    ip contains colons) or every peer edge silently degrades to relay."""
+    hl = HostLoader(None, pool_nodes=3)
+    try:
+        hl.membership.register("n6", "::1:41234", peer_port=7001)
+        hl.membership.register("n4", "10.0.0.5:555", peer_port=7002)
+        hl.membership.register("nb", "[fe80::2]:99", peer_port=7003)
+        hl.membership.register("noport", "127.0.0.1:1", peer_port=0)
+        d = hl._peer_dir()
+        assert d["n6"] == ("::1", 7001)
+        assert d["n4"] == ("10.0.0.5", 7002)
+        assert d["nb"] == ("fe80::2", 7003)
+        assert "noport" not in d  # no data-plane port: not routable
+    finally:
+        hl._listener.close()
+
+
+# ---------------------------------------------------------------------------
 # e2e: peer-routed jobs on a live pool
 # ---------------------------------------------------------------------------
 
@@ -313,6 +464,43 @@ def test_keyed_shuffle_partitions_and_matches():
         st = h.stats()
         assert st["peer_forwarded"] == n
         assert st["host_relay_bytes"] == 0
+    assert svc.orphaned() == []
+
+
+def test_chained_peer_hops_relay_zero_bytes_and_terminate():
+    """Two CONSECUTIVE route='peer' stages: a node's stage-s input arrives
+    over a peer edge and its result leaves over another.  The host's
+    exactly-once ledger must follow the item across both hops (the acks
+    resolve against peer_inflight, not inflight) or the job deadlocks."""
+    n = 40
+    with _service() as svc:
+        h = svc.submit(_three_stage(n), timeout=60)
+        assert h.result() == sorted(3 * (2 * i + 1) for i in range(n))
+        st = h.stats()
+        assert st["peer_forwarded"] == 2 * n  # both hops, every item
+        assert st["host_relay_bytes"] == 0
+        assert st["duplicates_dropped"] == 0
+    assert svc.orphaned() == []
+
+
+def test_kill_node_mid_run_chained_peer_hops_exactly_once():
+    """A mid-run kill while items sit mid-chain: the stranded ledger
+    entries hold the LAST input the host saw (possibly several stages
+    back), so recompute restarts there under the same ids and dedup keeps
+    delivery exactly-once."""
+    n = 60
+    with _service(nodes=3, workers=1) as svc:
+        h = svc.submit(_three_stage(n, stage2=_slow_times_three),
+                       timeout=120)
+        hl = svc.host_loader
+        deadline = time.monotonic() + 30
+        while hl.stats.items_total < 5:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        svc.kill_node("node2")
+        assert h.result() == sorted(3 * (2 * i + 1) for i in range(n))
+        assert hl.stats.deaths_detected == 1
+        assert h.stats()["items_collected"] == n
     assert svc.orphaned() == []
 
 
