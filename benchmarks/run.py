@@ -481,6 +481,256 @@ def _append_service_trajectory(record: dict) -> None:
         json.dump(history, fh, indent=2)
 
 
+# Gateway fairness bench sizes (CI smoke shrinks them via env).
+GW_SLEEP_MS = float(os.environ.get("REPRO_BENCH_GW_SLEEP_MS", "10"))
+GW_WIDE_JOBS = int(os.environ.get("REPRO_BENCH_GW_WIDE_JOBS", "2"))
+GW_WIDE_ITEMS = int(os.environ.get("REPRO_BENCH_GW_WIDE_ITEMS", "60"))
+GW_NARROW_JOBS = int(os.environ.get("REPRO_BENCH_GW_NARROW_JOBS", "8"))
+GW_AS_ITEMS = int(os.environ.get("REPRO_BENCH_GW_AS_ITEMS", "20"))
+
+
+def _gw_sleep_work(x):
+    """Fixed-cost work item: the gateway bench measures *scheduling*
+    latency, so compute time must be a constant, not a kernel."""
+    time.sleep(GW_SLEEP_MS / 1e3)
+    return x * 2
+
+
+def _gw_spec(n_items):
+    from repro.core.processes import EmitDetails, ResultDetails
+
+    def init(limit):
+        return (0, limit)
+
+    def create(state):
+        return (None, state) if state[0] >= state[1] \
+            else (state[0], (state[0] + 1, state[1]))
+
+    return ClusterSpec.simple(
+        host="127.0.0.1", nclusters=1, workers_per_node=2,
+        emit_details=EmitDetails(name="range", init=init,
+                                 init_data=(n_items,), create=create),
+        work_function=_gw_sleep_work,
+        result_details=ResultDetails(name="list", init=lambda: [],
+                                     collect=lambda a, x: a + [x],
+                                     finalise=sorted),
+    )
+
+
+def _p50(values):
+    ordered = sorted(values)
+    return ordered[len(ordered) // 2] if ordered else 0.0
+
+
+def gateway_fairness() -> list[str]:
+    """The job gateway's three pillars, measured.
+
+    On one warm pool (1 node x 2 workers, in-process node-loaders — the
+    gateway is host-side machinery, so node realism buys nothing here):
+
+    * **solo** — the narrow tenant alone: N one-item tickets through a
+      fair gateway; their p50 enqueue-to-done latency is the baseline;
+    * **fifo** — the PR 6 behaviour: a wide tenant's big high-priority
+      jobs enqueued first, the narrow tickets behind them, ``mode="fifo"``
+      (raw priority, no credit caps) — the starvation figure;
+    * **fair** — the same mix under weighted-fair admission with the wide
+      tenant capped at ``max_inflight=1``: the acceptance gate is the
+      narrow tenant's p50 at most 3x its solo p50;
+    * **durability** — enqueue, kill the gateway before admission,
+      restart over the same database, reattach: the result must match and
+      report ``cluster_boot_ms == 0`` (the pool stayed warm throughout);
+    * **autoscale** — a fresh 1-node pool, three tenants' bursts, one
+      ticket deliberately dropped and reattached by id: the queue-driven
+      control loop must grow the pool (``scale_up_events >= 1``).
+
+    Everything lands in results/bench_gateway.json (CI's gateway-smoke
+    gates on it) plus one bench_trajectory.json record.
+    """
+    from repro.cluster.deploy.inprocess import InProcessLauncher
+    from repro.cluster.gateway import (
+        AutoscalePolicy,
+        JobGateway,
+        TenantPolicy,
+    )
+    from repro.cluster.service import ClusterService
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    db_dir = os.path.join(RESULTS_DIR, "gateway_dbs")
+    os.makedirs(db_dir, exist_ok=True)
+
+    def db(name):
+        path = os.path.join(db_dir, f"{name}.db")
+        if os.path.exists(path):
+            os.remove(path)
+        return path
+
+    def ticket_latencies_ms(gw, tickets):
+        out = []
+        for t in tickets:
+            row = gw.store.get(t)
+            out.append((row.finished_at - row.submitted_at) * 1e3)
+        return out
+
+    tenants = {"wide": TenantPolicy(weight=1.0, max_inflight=1),
+               "narrow": TenantPolicy(weight=1.0)}
+    record: dict = {
+        "instance": {
+            "sleep_ms": GW_SLEEP_MS, "wide_jobs": GW_WIDE_JOBS,
+            "wide_items": GW_WIDE_ITEMS, "narrow_jobs": GW_NARROW_JOBS,
+            "autoscale_items": GW_AS_ITEMS,
+        },
+    }
+    rows = []
+    narrow_expected = [2 * i for i in range(1)]
+
+    with ClusterService(nodes=1, workers=2,
+                        launcher=InProcessLauncher()) as svc:
+        # -- solo: the narrow tenant with the pool to itself -------------
+        with JobGateway(svc, db("solo"), tenants=tenants) as gw:
+            tickets = [gw.enqueue(_gw_spec(1), tenant="narrow")
+                       for _ in range(GW_NARROW_JOBS)]
+            for t in tickets:
+                assert gw.attach(t).result(timeout=300) == narrow_expected
+            solo = ticket_latencies_ms(gw, tickets)
+        record["solo"] = {"p50_ms": round(_p50(solo), 3),
+                          "latencies_ms": [round(v, 3) for v in solo]}
+
+        # -- fifo baseline vs fair, same tenant mix ----------------------
+        for mode in ("fifo", "fair"):
+            with JobGateway(svc, db(mode), tenants=tenants,
+                            mode=mode) as gw:
+                t0 = time.perf_counter()
+                wide = [gw.enqueue(_gw_spec(GW_WIDE_ITEMS), tenant="wide",
+                                   priority=5)
+                        for _ in range(GW_WIDE_JOBS)]
+                narrow = [gw.enqueue(_gw_spec(1), tenant="narrow",
+                                     priority=0)
+                          for _ in range(GW_NARROW_JOBS)]
+                ok = all(
+                    gw.attach(t).result(timeout=600) == narrow_expected
+                    for t in narrow)
+                ok &= all(
+                    gw.attach(t).result(timeout=600)
+                    == [2 * i for i in range(GW_WIDE_ITEMS)]
+                    for t in wide)
+                dt = time.perf_counter() - t0
+                lat = ticket_latencies_ms(gw, narrow)
+            record[mode] = {
+                "narrow_p50_ms": round(_p50(lat), 3),
+                "narrow_max_ms": round(max(lat), 3),
+                "narrow_over_solo_p50": round(
+                    _p50(lat) / max(record["solo"]["p50_ms"], 1e-9), 3),
+                "elapsed_seconds": round(dt, 4),
+                "results_match": ok,
+            }
+            rows.append(
+                f"gateway_{mode}_narrow_p50,"
+                f"{record[mode]['narrow_p50_ms'] * 1e3:.0f},"
+                f"over_solo={record[mode]['narrow_over_solo_p50']}"
+                f";results_match={ok}"
+            )
+
+        # -- durability: enqueue, crash, restart, reattach ---------------
+        dura_db = db("durability")
+        gw1 = JobGateway(svc, dura_db,
+                         default_policy=TenantPolicy(max_active_jobs=0))
+        ticket = gw1.enqueue(_gw_spec(GW_AS_ITEMS), tenant="narrow")
+        gw1.kill()  # the simulated crash: the row survives, queued
+        t0 = time.perf_counter()
+        with JobGateway(svc, dura_db) as gw2:
+            handle = gw2.attach(ticket)
+            result = handle.result(timeout=300)
+            stats = handle.stats()
+        record["durability"] = {
+            "results_match": result == [2 * i for i in range(GW_AS_ITEMS)],
+            "cluster_boot_ms": stats.get("cluster_boot_ms"),
+            "reattach_to_result_seconds": round(
+                time.perf_counter() - t0, 4),
+        }
+        rows.append(
+            f"gateway_durability,"
+            f"{record['durability']['reattach_to_result_seconds'] * 1e6:.0f},"
+            f"results_match={record['durability']['results_match']}"
+            f";cluster_boot_ms={record['durability']['cluster_boot_ms']}"
+        )
+
+    # -- autoscale: three tenants' burst on a fresh 1-node pool ----------
+    policy = AutoscalePolicy(min_nodes=1, max_nodes=2, scale_up_wait_s=0.15,
+                             backlog_per_node=2.0, cooldown_s=0.3,
+                             idle_shrink_s=5.0, interval_s=0.05)
+    with ClusterService(nodes=1, workers=2,
+                        launcher=InProcessLauncher()) as svc:
+        with JobGateway(svc, db("autoscale"), autoscale=policy,
+                        max_active_jobs=2) as gw:
+            tickets = {}
+            for tenant in ("alice", "bob", "carol"):
+                tickets[tenant] = [
+                    gw.enqueue(_gw_spec(GW_AS_ITEMS), tenant=tenant)
+                    for _ in range(2)
+                ]
+            # One client "disconnects": bob's first handle is dropped and
+            # the ticket reattached by id only.
+            reattached = gw.attach(tickets["bob"][0])
+            ok = all(
+                gw.attach(t).result(timeout=600)
+                == [2 * i for i in range(GW_AS_ITEMS)]
+                for ts in tickets.values() for t in ts)
+            ok &= (reattached.result(timeout=60)
+                   == [2 * i for i in range(GW_AS_ITEMS)])
+            counters = svc.telemetry.snapshot()["cluster"]
+        record["autoscale"] = {
+            "tenants": 3,
+            "results_match": ok,
+            "scale_up_events": int(counters.get("scale_up_events", 0)),
+            "scale_down_events": int(counters.get("scale_down_events", 0)),
+        }
+        rows.append(
+            f"gateway_autoscale,0,"
+            f"results_match={ok}"
+            f";scale_up_events={record['autoscale']['scale_up_events']}"
+        )
+
+    out_path = os.path.join(RESULTS_DIR, "bench_gateway.json")
+    with open(out_path, "w") as fh:
+        json.dump({"gateway_fairness": record}, fh, indent=2)
+    _append_gateway_trajectory(record)
+    rows.append(
+        f"gateway_json,0,"
+        f"written={os.path.relpath(out_path, os.path.dirname(__file__))}"
+    )
+    return rows
+
+
+def _append_gateway_trajectory(record: dict) -> None:
+    """One appended record per gateway_fairness run: the fairness ratio,
+    durability round-trip and autoscale figures stay comparable across
+    PRs."""
+    path = os.path.join(RESULTS_DIR, "bench_trajectory.json")
+    history: list = []
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                history = json.load(fh)
+        except (OSError, ValueError):
+            history = []
+    history.append({
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "bench": "gateway_fairness",
+        "instance": record["instance"],
+        "solo_p50_ms": record["solo"]["p50_ms"],
+        "fair_over_solo_p50": record["fair"]["narrow_over_solo_p50"],
+        "fifo_over_solo_p50": record["fifo"]["narrow_over_solo_p50"],
+        "durability_results_match": record["durability"]["results_match"],
+        "durability_cluster_boot_ms": record["durability"]["cluster_boot_ms"],
+        "autoscale_results_match": record["autoscale"]["results_match"],
+        "scale_up_events": record["autoscale"]["scale_up_events"],
+    })
+    with open(path, "w") as fh:
+        json.dump(history, fh, indent=2)
+
+
 def chaos_smoke() -> list[str]:
     """Self-healing under injected faults: the chaos harness against a
     real subprocess pool.
@@ -919,6 +1169,7 @@ def main() -> None:
         table3_multicore_vs_cluster,
         table4_threads_vs_processes,
         warm_resubmit,
+        gateway_fairness,
         chaos_smoke,
         pipeline_two_stage,
         peer_pipeline,

@@ -36,6 +36,12 @@ Modules (one per architectural role):
 * :mod:`repro.cluster.service` — ClusterService: a persistent warm node pool
   multiplexing many jobs over one bootstrap (digest-keyed warm code cache,
   FIFO-with-priority scheduling);
+* :mod:`repro.cluster.gateway` — the job gateway in front of the service:
+  a durable SQLite-backed submit queue (tickets survive client disconnects
+  and gateway restarts), a weighted-fair multi-tenant admission scheduler
+  (deficit round robin + per-tenant in-flight caps), and a queue-driven
+  autoscaler growing/shrinking the pool through the launcher's late-join
+  and graceful-retirement paths;
 * :mod:`repro.cluster.telemetry` — live observability: the event bus +
   metrics registry every host-side component publishes into, the
   ``GET /metrics`` / dashboard HTTP endpoint, and the JSONL trace writer;

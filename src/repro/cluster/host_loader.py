@@ -141,7 +141,9 @@ class JobState:
     """
 
     def __init__(self, job_id: int, spec, *, priority: int = 0,
-                 pinned: bool = False, timeout: float | None = None):
+                 pinned: bool = False, timeout: float | None = None,
+                 tenant: str = "default",
+                 max_inflight: int | None = None):
         if hasattr(spec, "as_pipeline"):
             spec = spec.as_pipeline()
         spec.validate()
@@ -150,6 +152,12 @@ class JobState:
         self.priority = priority
         self.pinned = pinned  # one-shot mode: nodes serve their own stage
         self.timeout = timeout
+        # Multi-tenant metering (the gateway's fairness knobs): all jobs of
+        # one tenant share a host-dispatched in-flight item budget — the
+        # dispatch path (_answer) stops drawing for the tenant at the cap,
+        # so a wide job cannot monopolise node credits.
+        self.tenant = tenant
+        self.max_inflight = max_inflight
         self.S = len(spec.stages)
         S = self.S
         details = spec.emit.e_details
@@ -373,29 +381,52 @@ class HostLoader:
     # -- job admission ------------------------------------------------------
 
     def _new_job(self, spec, *, pinned: bool, priority: int = 0,
-                 timeout: float | None = None) -> JobState:
+                 timeout: float | None = None, tenant: str = "default",
+                 max_inflight: int | None = None) -> JobState:
         with self._job_lock:
             self._job_seq += 1
             jid = self._job_seq
         return JobState(jid, spec, priority=priority, pinned=pinned,
-                        timeout=timeout)
+                        timeout=timeout, tenant=tenant,
+                        max_inflight=max_inflight)
 
     def submit_job(self, spec, *, priority: int = 0,
-                   timeout: float | None = None) -> JobState:
+                   timeout: float | None = None, tenant: str = "default",
+                   max_inflight: int | None = None) -> JobState:
         """Queue one job for the dispatcher (service mode).
 
         Returns its :class:`JobState` — wait on ``.done``, then read
         ``.result`` / ``.error``.  Higher ``priority`` jobs are answered
         first when nodes demand work; ties dispatch FIFO (job id order).
+        ``tenant``/``max_inflight`` meter the dispatch path per tenant
+        (see :class:`JobState`); the gateway sets them, direct service
+        users normally leave the defaults.
         """
         job = self._new_job(spec, pinned=False, priority=priority,
-                            timeout=timeout)
+                            timeout=timeout, tenant=tenant,
+                            max_inflight=max_inflight)
         job.submitted_at = time.monotonic()
         self.telemetry.inc("jobs_submitted")
         self.telemetry.emit("job_submit", job=job.job_id,
-                            priority=priority, stages=job.S)
+                            priority=priority, tenant=tenant, stages=job.S)
         self._events.put(("submit", job))
         return job
+
+    def expect_nodes(self, node_ids: Sequence[str]) -> None:
+        """Announce launches after boot (the service's ``grow()`` path):
+        membership is single-writer, so the records are created on the
+        dispatcher thread.  Queued before ``launcher.launch`` is called,
+        so the LAUNCHING record always precedes its REGISTER."""
+        self._events.put(("expect", list(node_ids)))
+
+    def retire_node(self, node_id: str) -> None:
+        """Gracefully retire one pool node (the service's ``shrink()``
+        path): the dispatcher stops feeding it, sends UT — the node drains
+        its queue, flushes, returns its timing record and exits — and any
+        items still in flight host-side are requeued on UT ack exactly as
+        a death would, minus the death.  Refused (no-op) for the last
+        live node."""
+        self._events.put(("retire", node_id))
 
     def _admit(self, job: JobState) -> None:
         self._jobs[job.job_id] = job
@@ -675,6 +706,15 @@ class HostLoader:
                 self._broadcast_blocks()
             elif kind == "submit":
                 self._admit(event[1])
+            elif kind == "expect":
+                # Pool growth: announce the launches so their REGISTERs
+                # take the *expected*-arrival path (admitted even with
+                # elastic late join disabled).
+                for node_id in event[1]:
+                    if node_id not in self.membership.nodes:
+                        self.membership.expect(node_id)
+            elif kind == "retire":
+                self._retire(event[1])
             self._check_liveness()
 
     # -- data plane ---------------------------------------------------------
@@ -716,22 +756,84 @@ class HostLoader:
         except (OSError, ValueError):
             pass
 
+    def _retire(self, node_id: str) -> None:
+        """Graceful pool shrink (dispatcher thread — membership stays
+        single-writer).  The node is fenced first (``retiring`` stops
+        ``_answer`` feeding it) so no WORK_BATCH can race past the UT;
+        its in-flight items come back via the UT-ack requeue."""
+        rec = self.membership.nodes.get(node_id)
+        live = [r for r in self.membership.nodes.values()
+                if r.alive and not r.retiring]
+        if rec is None or not rec.alive or rec.retiring or len(live) <= 1:
+            self.telemetry.emit("scale_down_skipped", node=node_id,
+                                live=len(live))
+            return
+        rec.retiring = True
+        rec.credits = 0
+        self._send_ut(node_id)
+        self.telemetry.inc("scale_down_events")
+        self.telemetry.emit("scale_down", node=node_id,
+                            pool=len(live) - 1)
+
+    def _tenant_room(self, job: JobState,
+                     used: dict[str, int]) -> int | None:
+        """Remaining host-dispatched in-flight budget of this job's tenant
+        (None = uncapped).  ``used`` memoizes per-_answer-call totals and
+        accumulates the items drawn during the call."""
+        if job.max_inflight is None:
+            return None
+        tenant = job.tenant
+        if tenant not in used:
+            used[tenant] = sum(
+                sum(len(f) for f in j.inflight)
+                for j in self._jobs.values()
+                if j.active and j.tenant == tenant
+            )
+        return max(0, job.max_inflight - used[tenant])
+
+    def _stage_room(self, job: JobState, s: int, rec: NodeRecord) -> int | None:
+        """Per-stage prefetch cap on a *pool* node (None = uncapped): the
+        per-stage ``prefetch=`` knob used to bind only on pinned one-shot
+        deployments (where the node's whole window is one stage); on a
+        shared pool it becomes a host-side admission cap — at most
+        ``pool_workers + prefetch`` of this (job, stage)'s items in flight
+        per node."""
+        if job.pinned:
+            return None  # resolved node-side via the LOAD window
+        st = job.spec.stages[s]
+        if st.prefetch is None:
+            return None
+        cap = self.pool_workers + max(0, int(st.prefetch))
+        held = sum(1 for nid, _ in job.inflight[s].values()
+                   if nid == rec.node_id)
+        return max(0, cap - held)
+
     def _answer(self, node_id: str, credits: int) -> None:
         """Answer demand (the onrl server obligation), up to ``credits`` +
         any previously parked credits, drawn from the node's eligible
         (job, stage) queues in scheduling order — one WORK_BATCH per job
-        touched."""
+        touched.  Two admission caps can shrink a draw below the credit
+        window: the tenant in-flight budget (gateway fairness) and the
+        per-stage prefetch cap (pool jobs)."""
         rec = self.membership.nodes.get(node_id)
-        if rec is None or not rec.alive:
+        if rec is None or not rec.alive or rec.retiring:
             return
         want = credits + rec.credits
         rec.credits = 0
         if want <= 0:
             return
         sent = 0
+        tenant_used: dict[str, int] = {}
         for job, s in self._sources(rec):
+            limit = want - sent
+            room = self._tenant_room(job, tenant_used)
+            if room is not None:
+                limit = min(limit, room)
+            stage_room = self._stage_room(job, s, rec)
+            if stage_room is not None:
+                limit = min(limit, stage_room)
             batch = []
-            while sent + len(batch) < want:
+            while len(batch) < limit:
                 item = job.next_item(s)
                 if item is None:
                     break
@@ -740,6 +842,8 @@ class HostLoader:
                 continue
             if not self._send_batch(rec, job, batch, s):
                 return  # dead pipe (items requeued) or job failed on encode
+            if job.max_inflight is not None:
+                tenant_used[job.tenant] += len(batch)
             sent += len(batch)
             if sent >= want:
                 break
@@ -1414,8 +1518,21 @@ class HostLoader:
                 fn_blob = blob
                 job.code_shipped += 1
                 cache["misses"] += 1
-            entries.append({"s": s, "stage": job.spec.stages[s].name,
-                            "digest": digest, "function": fn_blob})
+            entry = {"s": s, "stage": job.spec.stages[s].name,
+                     "digest": digest, "function": fn_blob}
+            # Per-stage data-plane knobs for *pool* jobs ride the job's
+            # LOAD entries instead of the host-global pool config: the
+            # node tightens its flush cadence per job (min over bound
+            # stages), the host caps per-stage in-flight items per node
+            # (_stage_room) — pinned one-shot deployments keep resolving
+            # them into the node-global window/flush as before.
+            if not job.pinned:
+                st = job.spec.stages[s]
+                if st.flush_ms is not None:
+                    entry["flush_ms"] = float(st.flush_ms)
+                if st.prefetch is not None:
+                    entry["prefetch"] = int(st.prefetch)
+            entries.append(entry)
         return entries
 
     def _send_load(self, rec: NodeRecord, job: JobState | None) -> None:

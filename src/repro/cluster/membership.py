@@ -77,6 +77,11 @@ class NodeRecord:
     # The FailureEvent recorded when this node was declared dead (None
     # while alive) — the heal path reads its detection metadata.
     last_failure: Any = None
+    # Graceful retirement (pool shrink): set when the host decided to UT
+    # this node mid-run.  A retiring node is fenced from new work
+    # (``_answer`` skips it) but stays ``alive`` until its UT ack lands —
+    # its in-flight items are requeued there, not reaped as a death.
+    retiring: bool = False
     # Listening port of the node's peer data-plane server (0 = none
     # reported; the node is unreachable for peer routing / block trading
     # and routing tables simply omit it).

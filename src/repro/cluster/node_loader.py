@@ -267,6 +267,10 @@ def run_node(
     items_lock = threading.Lock()
     out_lock = threading.Lock()
     out_bufs: dict[int, list[dict]] = {}  # job_id -> pending results
+    # Per-job flush cadence: a pool job whose stages carry ``flush_ms=``
+    # tightens the flusher's wake interval while it is bound (min over its
+    # stages' values; the node-global flush_interval is the ceiling).
+    flush_overrides: dict[int, float] = {}
     flush_now = threading.Event()
     stop_flush = threading.Event()
 
@@ -445,7 +449,13 @@ def run_node(
 
     def flusher() -> None:
         while not stop_flush.is_set():
-            flush_now.wait(flush_interval)
+            interval = flush_interval
+            if flush_overrides:
+                # GIL-atomic read; a job binding/closing mid-min just
+                # shifts the next wake by one beat.
+                interval = min(interval,
+                               min(flush_overrides.values(), default=interval))
+            flush_now.wait(interval)
             flush_now.clear()
             flush()
         flush()  # drain the tail after the workers joined
@@ -503,6 +513,12 @@ def run_node(
     def bind_stages(job_id: int, plan: dict) -> None:
         bound = False
         for entry in plan.get("stages", ()):
+            ms = entry.get("flush_ms")
+            if ms is not None:
+                prior = flush_overrides.get(job_id)
+                iv = max(0.0005, float(ms) / 1000.0)
+                flush_overrides[job_id] = (iv if prior is None
+                                           else min(prior, iv))
             digest = entry["digest"]
             blob = entry["function"]
             if blob is not None:
@@ -676,6 +692,7 @@ def run_node(
                 jid = frame.job_id
                 for key in [k for k in fns if k[0] == jid]:
                     del fns[key]
+                flush_overrides.pop(jid, None)
                 route_tables.pop(jid, None)
                 with hold_lock:
                     dropped = peer_hold.pop(jid, None)

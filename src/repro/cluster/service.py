@@ -43,6 +43,7 @@ from typing import Any, Sequence
 
 from repro.cluster.deploy.base import Launcher, NodeHandle, PlacementPolicy
 from repro.cluster.host_loader import HostLoader, JobState
+from repro.cluster.membership import LAUNCHING
 from repro.cluster.telemetry import Telemetry, TelemetryServer
 from repro.core.timing import TimingCollector
 from repro.runtime.failures import HeartbeatMonitor
@@ -260,6 +261,9 @@ class ClusterService:
 
         self.host_loader: HostLoader | None = None
         self.handles: dict[str, NodeHandle] = {}
+        # Elastic growth: the next fresh node id (``grow()`` continues the
+        # ``node<i>`` sequence past the boot-time pool).
+        self._node_seq = nodes
         self.boot_ms: float | None = None
         self._boot_charged = False
         self._stop = threading.Event()
@@ -395,7 +399,9 @@ class ClusterService:
 
     def submit(self, spec, *, priority: int = 0,
                timeout: float | None = None, retries: int = 0,
-               backoff: float = 0.5, max_backoff: float = 30.0) -> JobHandle:
+               backoff: float = 0.5, max_backoff: float = 30.0,
+               tenant: str = "default",
+               max_inflight: int | None = None) -> JobHandle:
         """Submit one pipeline; returns immediately with its future.
 
         The first submission is charged the pool's boot time in its
@@ -410,6 +416,11 @@ class ClusterService:
         budget is spent (the poisoned-job guard: a deterministically
         failing work function stops, with the full history on
         ``handle.attempts``).  Each attempt gets its own ``timeout``.
+
+        ``tenant``/``max_inflight`` are the gateway's fairness plumbing:
+        all jobs of one tenant share a host-dispatched in-flight item
+        budget in the dispatcher (see ``JobState``); direct users can
+        leave the defaults.
         """
         if retries < 0:
             raise ValueError(f"retries must be >= 0, got {retries}")
@@ -419,7 +430,8 @@ class ClusterService:
         if self._stop.is_set() or self._closed:
             raise RuntimeError("cluster service is closed")
         job = self.host_loader.submit_job(spec, priority=priority,
-                                          timeout=timeout)
+                                          timeout=timeout, tenant=tenant,
+                                          max_inflight=max_inflight)
         with self._lock:
             boot = 0.0 if self._boot_charged else (self.boot_ms or 0.0)
             self._boot_charged = True
@@ -430,7 +442,7 @@ class ClusterService:
             t = threading.Thread(
                 target=self._supervise_retries,
                 args=(handle, spec, priority, timeout, retries, backoff,
-                      max_backoff),
+                      max_backoff, tenant, max_inflight),
                 name=f"job-retry-{job.job_id}", daemon=True,
             )
             t.start()
@@ -438,7 +450,9 @@ class ClusterService:
 
     def _supervise_retries(self, handle: JobHandle, spec, priority: int,
                            timeout: float | None, retries: int,
-                           backoff: float, max_backoff: float) -> None:
+                           backoff: float, max_backoff: float,
+                           tenant: str = "default",
+                           max_inflight: int | None = None) -> None:
         """Per-job retry loop (its own daemon thread; the dispatcher never
         blocks on a backoff).  Records every attempt on the handle and in
         the telemetry job gauges, resubmits failed attempts until the
@@ -469,7 +483,8 @@ class ClusterService:
             attempt += 1
             try:
                 new_job = self.host_loader.submit_job(
-                    spec, priority=priority, timeout=timeout)
+                    spec, priority=priority, timeout=timeout,
+                    tenant=tenant, max_inflight=max_inflight)
             except Exception:
                 break  # service torn down under us: the last error stands
             handle._job = new_job
@@ -484,6 +499,87 @@ class ClusterService:
         """Hard-kill one pool node: a real workstation loss, detected only
         by its heartbeats going silent (in-flight work is redispatched)."""
         self.handles[node_id].kill()
+
+    # -- elasticity ----------------------------------------------------------
+
+    def grow(self, n: int = 1, *, reason: str = "manual") -> list[str]:
+        """Add ``n`` fresh nodes to the running pool via the mid-run
+        late-join path: each launch is announced to the dispatcher first
+        (so its REGISTER takes the expected-arrival path even with
+        elastic late join disabled), then launched; on registration it
+        receives the pool config, every active job's LOAD, and the peer
+        directory broadcast.  Returns the new node ids without waiting
+        for them to boot."""
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        self.start()
+        if self._stop.is_set() or self._closed:
+            raise RuntimeError("cluster service is closed")
+        with self._lock:
+            new_ids = []
+            for _ in range(n):
+                new_ids.append(f"node{self._node_seq}")
+                self._node_seq += 1
+        self.host_loader.expect_nodes(new_ids)
+        for node_id in new_ids:
+            self.handles[node_id] = self.launcher.launch(node_id)
+        self.telemetry.inc("scale_up_events", n)
+        self.telemetry.emit("scale_up", nodes=new_ids, reason=reason,
+                            pool=len(self.handles))
+        return new_ids
+
+    def shrink(self, node_id: str | None = None, *,
+               reason: str = "manual") -> str | None:
+        """Gracefully retire one pool node (default: the newest live one):
+        the dispatcher fences it from new work and sends UT — the node
+        drains its queued items, flushes, returns its timing record and
+        exits; in-flight items are requeued on the ack.  Returns the
+        retired node id, or None when nothing is retirable (the last live
+        node never is)."""
+        if self.host_loader is None or self._stop.is_set() or self._closed:
+            return None
+        candidates = self.pool_alive()
+        if len(candidates) <= 1:
+            return None
+        if node_id is None:
+            node_id = candidates[-1]
+        elif node_id not in candidates:
+            return None
+        self.host_loader.retire_node(node_id)
+        return node_id
+
+    def pool_alive(self) -> list[str]:
+        """Live, non-retiring pool members in registration order (a
+        cross-thread snapshot — authoritative checks re-run on the
+        dispatcher)."""
+        hl = self.host_loader
+        if hl is None:
+            return []
+        for _ in range(8):
+            try:
+                recs = sorted(hl.membership.nodes.values(),
+                              key=lambda r: r.index)
+                return [r.node_id for r in recs
+                        if r.alive and not r.retiring]
+            except RuntimeError:
+                continue
+        return []
+
+    def pool_span(self) -> tuple[int, int]:
+        """(alive, launching) member counts — the autoscaler's view of
+        capacity present and capacity already on its way."""
+        hl = self.host_loader
+        if hl is None:
+            return (0, 0)
+        for _ in range(8):
+            try:
+                recs = list(hl.membership.nodes.values())
+                alive = sum(1 for r in recs if r.alive and not r.retiring)
+                launching = sum(1 for r in recs if r.state == LAUNCHING)
+                return (alive, launching)
+            except RuntimeError:
+                continue
+        return (0, 0)
 
     def publish_block(self, name: str, data: bytes) -> str:
         """Publish a named read-only broadcast block to the pool.

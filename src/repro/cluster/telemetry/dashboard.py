@@ -1,11 +1,15 @@
 """The self-contained live dashboard served at ``GET /``.
 
 One HTML string, zero external assets (the status endpoint must work on an
-air-gapped cluster host): inline CSS, inline JS polling ``/metrics`` and
-``/events?since=`` once a second.  Layout is stat tiles (the headline
-numbers an operator scans first), a nodes table, a jobs table, and the
-rolling event log — in the spirit of bndl's dash status panels, minus the
-framework.
+air-gapped cluster host): inline CSS, inline JS subscribing to the
+``/events/stream`` Server-Sent Events feed — ``snapshot`` frames re-render
+the page, ``bus`` frames append to the event log — so the page updates on
+change instead of hammering the endpoint once a second.  When EventSource
+is unavailable or the stream drops, it degrades to the classic
+``/metrics`` + ``/events?since=`` 1 s poll.  Layout is stat tiles (the
+headline numbers an operator scans first), a nodes table, a jobs table,
+and the rolling event log — in the spirit of bndl's dash status panels,
+minus the framework.
 
 Design notes: values wear text ink, never a series colour; node/job state
 is a coloured dot *plus* the state word (never colour alone); numbers are
@@ -105,18 +109,11 @@ function table(headers, rows) {
     "<tr>" + cells.map(([v, c]) => `<td class="${c || ""}">${v}</td>`).join("") +
     "</tr>").join("") + "</table>";
 }
-async function refresh() {
-  let snap;
-  try {
-    snap = await (await fetch("metrics")).json();
-    document.getElementById("err").textContent = "";
-  } catch (e) {
-    document.getElementById("err").textContent = "endpoint unreachable: " + e;
-    return;
-  }
+function render(snap, how) {
   const c = snap.cluster || {};
+  const g = snap.gateway;
   document.getElementById("meta").textContent =
-    `up ${fmt(Math.round(snap.uptime_s))}s · refreshed ${new Date().toLocaleTimeString()}`;
+    `up ${fmt(Math.round(snap.uptime_s))}s · ${how} ${new Date().toLocaleTimeString()}`;
   document.getElementById("tiles").innerHTML =
     tile(`${fmt(c.nodes_alive ?? 0)}/${fmt(c.nodes_total ?? 0)}`, "nodes alive") +
     tile(fmt(c.jobs_active ?? 0), "jobs active") +
@@ -125,7 +122,11 @@ async function refresh() {
     tile(bytes((c.wire_bytes_sent ?? 0) + (c.wire_bytes_recv ?? 0)), "bytes moved") +
     tile(fmt(c.peer_forwarded ?? 0), "peer forwarded") +
     tile(bytes(c.host_relay_bytes ?? 0), "host relay bytes") +
-    tile(fmt(c.redispatched ?? 0), "redispatched");
+    tile(fmt(c.redispatched ?? 0), "redispatched") +
+    (g ? tile(fmt(g.queued ?? 0), "tickets queued") +
+         tile(fmt(g.active ?? 0), "tickets active") +
+         tile(`${fmt(c.scale_up_events ?? 0)}/${fmt(c.scale_down_events ?? 0)}`,
+              "scale up/down") : "");
   const nodes = Object.entries(snap.nodes || {}).sort();
   document.getElementById("nodes").innerHTML = table(
     [["node"], ["state"], ["items", "num"], ["credits", "num"],
@@ -164,24 +165,62 @@ async function refresh() {
       return [[esc(name)], [fmt(h.count), "num"], [fmt(mean), "num"],
         [`<span style="color:var(--ink-2)">${esc(dist)}</span>`]];
     }));
+}
+function appendEvents(evts) {
+  if (!evts.length) return;
+  for (const e of evts) {
+    cursor = Math.max(cursor, e.seq);
+    const extra = Object.entries(e)
+      .filter(([k]) => !["seq", "ts", "kind"].includes(k))
+      .map(([k, v]) => `${k}=${JSON.stringify(v)}`).join(" ");
+    log.push(`<span class="t">${new Date(e.ts * 1000).toLocaleTimeString()}` +
+             `</span> ${esc(e.kind)} ${esc(extra)}`);
+  }
+  while (log.length > 200) log.shift();
+  const el = document.getElementById("events");
+  el.innerHTML = log.join("\\n");
+  el.scrollTop = el.scrollHeight;
+}
+// Primary transport: the SSE feed pushes snapshots + bus events as they
+// happen.  Fallback: the 1 s poll loop, for clients without EventSource
+// or when the stream dies and cannot be re-opened.
+let pollTimer = null;
+async function poll() {
+  let snap;
+  try {
+    snap = await (await fetch("metrics")).json();
+    document.getElementById("err").textContent = "";
+  } catch (e) {
+    document.getElementById("err").textContent = "endpoint unreachable: " + e;
+    return;
+  }
+  render(snap, "polled");
   try {
     const ev = await (await fetch(`events?since=${cursor}`)).json();
-    for (const e of ev.events) {
-      cursor = Math.max(cursor, e.seq);
-      const extra = Object.entries(e)
-        .filter(([k]) => !["seq", "ts", "kind"].includes(k))
-        .map(([k, v]) => `${k}=${JSON.stringify(v)}`).join(" ");
-      log.push(`<span class="t">${new Date(e.ts * 1000).toLocaleTimeString()}` +
-               `</span> ${esc(e.kind)} ${esc(extra)}`);
-    }
-    while (log.length > 200) log.shift();
-    const el = document.getElementById("events");
-    el.innerHTML = log.join("\\n");
-    el.scrollTop = el.scrollHeight;
+    appendEvents(ev.events);
   } catch (e) { /* metrics succeeded; keep the page alive */ }
 }
-refresh();
-setInterval(refresh, 1000);
+function startPolling() {
+  if (pollTimer) return;
+  poll();
+  pollTimer = setInterval(poll, 1000);
+}
+function startStream() {
+  if (typeof EventSource === "undefined") { startPolling(); return; }
+  const es = new EventSource(`events/stream?since=${cursor}`);
+  es.addEventListener("snapshot", ev => {
+    document.getElementById("err").textContent = "";
+    render(JSON.parse(ev.data), "streamed");
+  });
+  es.addEventListener("bus", ev => appendEvents([JSON.parse(ev.data)]));
+  es.onerror = () => {
+    es.close();
+    document.getElementById("err").textContent =
+      "event stream dropped; falling back to polling";
+    startPolling();
+  };
+}
+startStream();
 </script>
 </body>
 </html>

@@ -9,6 +9,10 @@ serves, on a daemon thread:
 * ``GET /jobs`` / ``GET /nodes`` — the snapshot's job/node sections;
 * ``GET /events?since=N``      — ring events after cursor ``N`` (JSON,
   with ``next`` = the cursor to pass on the following poll);
+* ``GET /events/stream``       — Server-Sent Events: pushes each new bus
+  event (``event: bus``) as it lands plus periodic full snapshots
+  (``event: snapshot``), so the dashboard renders on change instead of
+  polling; ``?since=N`` resumes from a cursor;
 * anything else                — 404; a malformed query (``since=x``) — 400.
 
 Read-only by construction: every route is a snapshot read, no handler
@@ -21,6 +25,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlsplit
 
@@ -41,7 +46,10 @@ class TelemetryServer:
     def __init__(self, telemetry: Telemetry, *, host: str = "127.0.0.1",
                  port: int = 0):
         self.telemetry = telemetry
-        handler = _make_handler(telemetry)
+        # Set on close(): open /events/stream loops watch it so shutdown
+        # is not held hostage by long-lived SSE connections.
+        self._stop = threading.Event()
+        handler = _make_handler(telemetry, self._stop)
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._httpd.daemon_threads = True
         self.host, self.port = self._httpd.server_address[:2]
@@ -60,12 +68,19 @@ class TelemetryServer:
         if self._closed:
             return
         self._closed = True
+        self._stop.set()
         self._httpd.shutdown()
         self._thread.join(timeout=5.0)
         self._httpd.server_close()
 
 
-def _make_handler(telemetry: Telemetry) -> type:
+def _make_handler(telemetry: Telemetry, stop: threading.Event) -> type:
+    # SSE pacing: how often the stream loop wakes to check for new bus
+    # events, and how long between unconditional full-snapshot frames
+    # (gauges move without emitting events — pool sizes, queue depth).
+    SSE_POLL_S = 0.25
+    SSE_SNAPSHOT_EVERY_S = 3.0
+
     class Handler(BaseHTTPRequestHandler):
         # The endpoint must never spam the host process's stderr.
         def log_message(self, fmt: str, *args) -> None:  # pragma: no cover
@@ -83,6 +98,38 @@ def _make_handler(telemetry: Telemetry) -> type:
         def _json(self, obj, status: int = 200) -> None:
             body = json.dumps(obj, default=str, indent=1).encode("utf-8")
             self._reply(status, body, "application/json; charset=utf-8")
+
+        def _sse_frame(self, event: str, obj) -> None:
+            body = json.dumps(obj, default=str, separators=(",", ":"))
+            self.wfile.write(
+                f"event: {event}\ndata: {body}\n\n".encode("utf-8"))
+            self.wfile.flush()
+
+        def _stream(self, since: int) -> None:
+            """Server-Sent Events loop: one ``snapshot`` frame up front,
+            then ``bus`` frames as ring events land, with a fresh
+            ``snapshot`` on activity or at least every few seconds (gauges
+            move without emitting events).  Runs on this connection's
+            thread until the client disconnects or the server closes.
+            """
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-store")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            cursor = since
+            self._sse_frame("snapshot", telemetry.snapshot())
+            last_snap = time.monotonic()
+            while not stop.is_set():
+                events = telemetry.events_since(cursor)
+                for ev in events:
+                    self._sse_frame("bus", ev)
+                    cursor = ev["seq"]
+                now = time.monotonic()
+                if events or now - last_snap >= SSE_SNAPSHOT_EVERY_S:
+                    self._sse_frame("snapshot", telemetry.snapshot())
+                    last_snap = now
+                stop.wait(SSE_POLL_S)
 
         def do_GET(self) -> None:  # noqa: N802 (stdlib naming)
             try:
@@ -111,6 +158,14 @@ def _make_handler(telemetry: Telemetry) -> type:
                     self._json({"jobs": telemetry.snapshot()["jobs"]})
                 elif path == "/nodes":
                     self._json({"nodes": telemetry.snapshot()["nodes"]})
+                elif path == "/events/stream":
+                    try:
+                        since = int((query.get("since") or ["0"])[0])
+                    except ValueError:
+                        self._json({"error": "since must be an integer"},
+                                   status=400)
+                        return
+                    self._stream(since)
                 elif path == "/events":
                     try:
                         since = int((query.get("since") or ["0"])[0])

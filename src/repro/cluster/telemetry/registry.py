@@ -244,9 +244,9 @@ class Telemetry:
 
     def set_sampler(self, name: str, fn: Callable[[], dict]) -> None:
         """Register a pull-side sampler (``"nodes"``, ``"cluster"``,
-        ``"timing"`` or ``"chaos"``) — invoked on every snapshot, on the
-        reader's thread."""
-        if name not in ("nodes", "cluster", "timing", "chaos"):
+        ``"timing"``, ``"chaos"`` or ``"gateway"``) — invoked on every
+        snapshot, on the reader's thread."""
+        if name not in ("nodes", "cluster", "timing", "chaos", "gateway"):
             raise ValueError(f"unknown sampler section {name!r}")
         self._samplers[name] = fn
 
@@ -273,6 +273,7 @@ class Telemetry:
         sampled_cluster = self._sample("cluster")
         timing = self._sample("timing")
         chaos = self._sample("chaos")
+        gateway = self._sample("gateway")
         now = self._clock()
         with self._lock:
             jobs = {str(jid): dict(g) for jid, g in self._jobs.items()}
@@ -306,6 +307,8 @@ class Telemetry:
             snap["timing"] = timing
         if chaos:
             snap["chaos"] = chaos
+        if gateway:
+            snap["gateway"] = gateway
         return snap
 
     def prometheus(self) -> str:
@@ -317,6 +320,10 @@ class Telemetry:
         * ``repro_cluster_<counter>`` — cluster section, numeric entries;
         * ``repro_chaos_<field>`` — fault-injection section numerics
           (present only when a chaos controller is armed);
+        * ``repro_gateway_<field>`` — job-gateway section numerics, with
+          the per-tenant breakdown flattened as
+          ``repro_gateway_tenant_<field>{tenant=...}`` and the ticket
+          ledger as ``repro_gateway_tickets{state=...}``;
         * ``repro_job_<gauge>{job="1"}`` — per-job numerics; per-stage
           list gauges add a ``stage`` label per element;
         * ``repro_node_<field>{node="node0"}`` — per-node numerics, with
@@ -344,6 +351,14 @@ class Telemetry:
             sample(f"repro_cluster_{key}", {}, val)
         for key, val in (snap.get("chaos") or {}).items():
             sample(f"repro_chaos_{key}", {}, val)  # numerics only
+        gateway = dict(snap.get("gateway") or {})
+        for state, n in (gateway.pop("tickets", None) or {}).items():
+            sample("repro_gateway_tickets", {"state": state}, n)
+        for tenant, fields in (gateway.pop("tenants", None) or {}).items():
+            for key, val in (fields or {}).items():
+                sample(f"repro_gateway_tenant_{key}", {"tenant": tenant}, val)
+        for key, val in gateway.items():
+            sample(f"repro_gateway_{key}", {}, val)  # numerics only
         for jid, gauges in snap["jobs"].items():
             for key, val in gauges.items():
                 if isinstance(val, (list, tuple)):

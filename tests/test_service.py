@@ -225,3 +225,89 @@ def test_builder_service_backend_shared_warm_pool():
         # the shared pool survives its applications
         assert svc.run(_spec(_double, 5)) == [0, 2, 4, 6, 8]
     assert svc.orphaned() == []
+
+
+# ---------------------------------------------------------------------------
+# elasticity (grow / graceful shrink)
+# ---------------------------------------------------------------------------
+
+
+def _wait_pool(svc, n, timeout=30.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if len(svc.pool_alive()) == n:
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"pool never reached {n}: {svc.pool_alive()}")
+
+
+def test_grow_adds_nodes_via_late_join():
+    """grow() launches fresh node-loaders into the running pool: they
+    register mid-run, receive the pool config, and serve work."""
+    with _service(nodes=1) as svc:
+        assert svc.run(_spec(_double, 10)) == [2 * i for i in range(10)]
+        new_ids = svc.grow(1)
+        assert new_ids == ["node1"]
+        _wait_pool(svc, 2)
+        h = svc.submit(_spec(_double, 40), timeout=60)
+        assert h.result() == [2 * i for i in range(40)]
+        # Both the original and the late-joined node did work eventually
+        # (the pool is 2-wide; at minimum the grown node is a live member).
+        assert svc.pool_alive() == ["node0", "node1"]
+        assert svc.telemetry.snapshot()["cluster"]["scale_up_events"] == 1
+    assert svc.orphaned() == []
+
+
+def test_shrink_retires_node_gracefully():
+    """shrink() fences the victim and UTs it: the pool contracts without a
+    death event, and jobs keep producing exact results before and after."""
+    with _service(nodes=2) as svc:
+        assert svc.run(_spec(_double, 10)) == [2 * i for i in range(10)]
+        retired = svc.shrink()
+        assert retired == "node1"
+        _wait_pool(svc, 1)
+        assert svc.run(_spec(_double, 20)) == [2 * i for i in range(20)]
+        snap = svc.telemetry.snapshot()["cluster"]
+        assert snap["scale_down_events"] == 1
+        assert svc.host_loader.membership.failures == []  # no death, a retire
+        # The last live node is never retirable.
+        assert svc.shrink() is None
+    assert svc.orphaned() == []
+
+
+def test_grow_then_shrink_round_trip():
+    with _service(nodes=1) as svc:
+        svc.start()
+        svc.grow(1)
+        _wait_pool(svc, 2)
+        assert svc.shrink() == "node1"
+        _wait_pool(svc, 1)
+        assert svc.run(_spec(_triple, 12)) == [3 * i for i in range(12)]
+    assert svc.orphaned() == []
+
+
+# ---------------------------------------------------------------------------
+# per-stage data-plane knobs on the shared pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_job_honours_stage_prefetch_cap():
+    """A service-pool job's per-stage prefetch= bounds how many of its
+    items one node may hold: with prefetch=0 no WORK_BATCH can exceed the
+    pool's worker count, where an uncapped job batches the full credit
+    window."""
+    from repro.core.dsl import PipelineSpec, Stage
+
+    def capped_spec(n):
+        return PipelineSpec.simple(
+            host="127.0.0.1", emit_details=_range_emit(n),
+            stages=[Stage(name="double", fn=_double, nclusters=1,
+                          workers_per_node=2, prefetch=0, flush_ms=1.0)],
+            result_details=_list_collect(),
+        )
+
+    with _service(nodes=1, workers=2) as svc:
+        h = svc.submit(capped_spec(40), timeout=60)
+        assert h.result() == [2 * i for i in range(40)]
+        assert svc.host_loader.stats.max_batch <= 2  # pool_workers + 0
+    assert svc.orphaned() == []

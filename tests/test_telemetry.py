@@ -442,3 +442,62 @@ def test_service_without_endpoint_has_no_server():
         snap = svc.metrics_snapshot()
         assert snap["cluster"]["jobs_completed"] == 1
     assert svc.orphaned() == []
+
+
+def test_sse_stream_pushes_snapshots_and_bus_events():
+    """/events/stream: a snapshot frame arrives up front, emitted bus
+    events are pushed without polling, and close() ends the stream rather
+    than hanging on the open connection."""
+    import http.client
+
+    telem = Telemetry()
+    telem.inc("nodes_alive", 2)
+    server = TelemetryServer(telem)
+    conn = http.client.HTTPConnection(server.host, server.port, timeout=5.0)
+    try:
+        conn.request("GET", "/events/stream")
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert resp.headers["Content-Type"] == "text/event-stream"
+
+        def read_frame():
+            lines = []
+            while True:
+                line = resp.fp.readline().decode("utf-8").rstrip("\n")
+                if not line:
+                    if lines:
+                        return lines
+                    continue
+                lines.append(line)
+
+        first = read_frame()
+        assert first[0] == "event: snapshot"
+        snap = json.loads(first[1][len("data: "):])
+        assert snap["cluster"]["nodes_alive"] == 2
+
+        telem.emit("node_registered", node="node7")
+        deadline = time.monotonic() + 5
+        kinds = []
+        while time.monotonic() < deadline:
+            frame = read_frame()
+            if frame[0] == "event: bus":
+                ev = json.loads(frame[1][len("data: "):])
+                kinds.append(ev["kind"])
+                if "node_registered" in kinds:
+                    break
+        assert "node_registered" in kinds
+    finally:
+        server.close()  # must not hang on the live stream
+        conn.close()
+
+
+def test_sse_stream_rejects_bad_cursor():
+    telem = Telemetry()
+    server = TelemetryServer(telem)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as err:
+            urllib.request.urlopen(
+                f"{server.url}/events/stream?since=x", timeout=5.0)
+        assert err.value.code == 400
+    finally:
+        server.close()
