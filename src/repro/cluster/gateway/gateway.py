@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import threading
 import time
+import traceback
 import uuid
 from typing import Any
 
@@ -305,38 +306,61 @@ class JobGateway:
             except Exception:
                 if self._stop.is_set():
                     return  # store/service closed under the pump: done
-                raise
+                # A dead pump strands every tenant — nothing is ever
+                # reaped, expired or admitted again and waiters block
+                # forever — so surface the error on the bus and keep
+                # pumping.
+                self.telemetry.inc("gateway_pump_errors")
+                self.telemetry.emit("gateway_pump_error",
+                                    error=traceback.format_exc(limit=8))
 
     def _reap(self) -> None:
         with self._lock:
-            finished = [a for a in self._active.values() if a.handle.done()]
+            # Claim atomically: close(wait=True) reaps on the caller
+            # thread while the pump runs its own _reap, and each finished
+            # ticket must be recorded (store row, counters, bus event)
+            # exactly once — whoever pops the ticket processes it.
+            finished = [self._active.pop(a.ticket)
+                        for a in list(self._active.values())
+                        if a.handle.done()]
         for a in finished:
-            handle = a.handle
-            stats = handle.stats()
-            summary = {
-                "items_collected": stats.get("items_collected"),
-                "cluster_boot_ms": stats.get("cluster_boot_ms"),
-                "submit_to_first_result_ms":
-                    stats.get("submit_to_first_result_ms"),
-                "code_shipped": stats.get("code_shipped"),
-                "retries": stats.get("retries"),
-            }
-            if handle.error is None:
-                self.store.finish(a.ticket, result=handle._job.result,
-                                  summary=summary)
-                self.telemetry.inc("tickets_done")
-                self.telemetry.emit("ticket_done", ticket=a.ticket,
-                                    tenant=a.tenant,
-                                    items=stats.get("items_collected"))
-            else:
-                self.store.finish(a.ticket, error=str(handle.error),
-                                  summary=summary)
+            try:
+                self._record_finished(a)
+            except Exception as exc:
+                # An unpicklable result (or a store hiccup) must not
+                # strand the row as ``running`` or kill the pump: record
+                # the ticket failed instead.
+                self.store.finish(a.ticket,
+                                  error=f"{type(exc).__name__}: {exc}")
                 self.telemetry.inc("tickets_failed")
                 self.telemetry.emit("ticket_failed", ticket=a.ticket,
-                                    tenant=a.tenant,
-                                    error=str(handle.error))
-            with self._lock:
-                self._active.pop(a.ticket, None)
+                                    tenant=a.tenant, error=str(exc))
+
+    def _record_finished(self, a: _Active) -> None:
+        handle = a.handle
+        stats = handle.stats()
+        summary = {
+            "items_collected": stats.get("items_collected"),
+            "cluster_boot_ms": stats.get("cluster_boot_ms"),
+            "submit_to_first_result_ms":
+                stats.get("submit_to_first_result_ms"),
+            "code_shipped": stats.get("code_shipped"),
+            "retries": stats.get("retries"),
+        }
+        if handle.error is None:
+            self.store.finish(a.ticket, result=handle._job.result,
+                              summary=summary)
+            self.telemetry.inc("tickets_done")
+            self.telemetry.emit("ticket_done", ticket=a.ticket,
+                                tenant=a.tenant,
+                                items=stats.get("items_collected"))
+        else:
+            self.store.finish(a.ticket, error=str(handle.error),
+                              summary=summary)
+            self.telemetry.inc("tickets_failed")
+            self.telemetry.emit("ticket_failed", ticket=a.ticket,
+                                tenant=a.tenant,
+                                error=str(handle.error))
 
     def _expire(self) -> None:
         with self._lock:
@@ -360,44 +384,58 @@ class JobGateway:
                 entry = self.scheduler.pop_next(counts)
             if entry is None:
                 return
-            row = self._row(entry.ticket)
-            spec = entry.spec if entry.spec is not None else row.load_spec()
-            job_timeout = None
-            if entry.timeout is not None:
-                job_timeout = entry.deadline() - time.time()
-                if job_timeout <= 0:
-                    self.store.cancel(
-                        entry.ticket,
-                        f"timed out after {entry.timeout}s while queued")
-                    self.telemetry.inc("tickets_cancelled")
-                    self.telemetry.emit("ticket_cancelled",
-                                        ticket=entry.ticket,
-                                        tenant=entry.tenant,
-                                        reason="queued_timeout")
-                    continue
-            pol = self.scheduler.policy(entry.tenant)
-            if self.mode == "fair":
-                # Cross-tenant ordering is the DRR's job (already applied)
-                # — inside the pool every tenant's jobs run at one
-                # priority, with the tenant's credit cap metering items.
-                handle = self.service.submit(
-                    spec, priority=0, timeout=job_timeout,
-                    retries=entry.retries, tenant=entry.tenant,
-                    max_inflight=pol.max_inflight,
-                )
-            else:
-                handle = self.service.submit(
-                    spec, priority=entry.priority, timeout=job_timeout,
-                    retries=entry.retries, tenant=entry.tenant,
-                )
-            self.store.mark_running(entry.ticket)
-            with self._lock:
-                self._active[entry.ticket] = _Active(entry.ticket,
-                                                     entry.tenant, handle)
-            self.telemetry.inc("tickets_admitted")
-            self.telemetry.emit("ticket_admitted", ticket=entry.ticket,
-                                tenant=entry.tenant,
-                                job=handle.job_id)
+            try:
+                self._admit_one(entry)
+            except Exception as exc:
+                # The entry is already out of the scheduler, so one bad
+                # ticket (unpicklable spec, spec validation refusing it,
+                # a submit error) fails alone — the pump survives and
+                # every other tenant keeps flowing.
+                self.store.finish(entry.ticket,
+                                  error=f"{type(exc).__name__}: {exc}")
+                self.telemetry.inc("tickets_failed")
+                self.telemetry.emit("ticket_failed", ticket=entry.ticket,
+                                    tenant=entry.tenant, error=str(exc))
+
+    def _admit_one(self, entry: QueueEntry) -> None:
+        row = self._row(entry.ticket)
+        spec = entry.spec if entry.spec is not None else row.load_spec()
+        job_timeout = None
+        if entry.timeout is not None:
+            job_timeout = entry.deadline() - time.time()
+            if job_timeout <= 0:
+                self.store.cancel(
+                    entry.ticket,
+                    f"timed out after {entry.timeout}s while queued")
+                self.telemetry.inc("tickets_cancelled")
+                self.telemetry.emit("ticket_cancelled",
+                                    ticket=entry.ticket,
+                                    tenant=entry.tenant,
+                                    reason="queued_timeout")
+                return
+        pol = self.scheduler.policy(entry.tenant)
+        if self.mode == "fair":
+            # Cross-tenant ordering is the DRR's job (already applied)
+            # — inside the pool every tenant's jobs run at one
+            # priority, with the tenant's credit cap metering items.
+            handle = self.service.submit(
+                spec, priority=0, timeout=job_timeout,
+                retries=entry.retries, tenant=entry.tenant,
+                max_inflight=pol.max_inflight,
+            )
+        else:
+            handle = self.service.submit(
+                spec, priority=entry.priority, timeout=job_timeout,
+                retries=entry.retries, tenant=entry.tenant,
+            )
+        self.store.mark_running(entry.ticket)
+        with self._lock:
+            self._active[entry.ticket] = _Active(entry.ticket,
+                                                 entry.tenant, handle)
+        self.telemetry.inc("tickets_admitted")
+        self.telemetry.emit("ticket_admitted", ticket=entry.ticket,
+                            tenant=entry.tenant,
+                            job=handle.job_id)
 
     # -- lifecycle -----------------------------------------------------------
 

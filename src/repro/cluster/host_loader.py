@@ -188,6 +188,14 @@ class JobState:
         )
         self.peer_inflight: list[dict[int, tuple[str, Any, int]]] = [
             {} for _ in range(S)]
+        # Chained-hop acks race: consecutive peer hops are acked by
+        # *different* nodes over independent sockets, so hop s+1's ack can
+        # arrive before hop s's has created the ``peer_inflight[s+1]``
+        # entry it must advance.  Such an early ack parks here as
+        # (s, result id) -> (acking node, target node) and is applied the
+        # moment the predecessor's ack lands (dropped if the item is
+        # requeued first).
+        self.parked_acks: dict[tuple[int, int], tuple[str, str]] = {}
         # WORK_BATCH send time per (stage, item id): the item-latency
         # histogram observes completion-minus-dispatch.
         self.dispatch_ts: dict[tuple[int, int], float] = {}
@@ -418,6 +426,14 @@ class HostLoader:
         dispatcher thread.  Queued before ``launcher.launch`` is called,
         so the LAUNCHING record always precedes its REGISTER."""
         self._events.put(("expect", list(node_ids)))
+
+    def retract_nodes(self, node_ids: Sequence[str]) -> None:
+        """Withdraw launch announcements whose ``launcher.launch`` failed
+        (the service's ``grow()`` error path): a LAUNCHING record with no
+        process behind it would otherwise count as capacity on its way
+        forever — suppressing autoscale scale-ups and keeping stages
+        eligible in ``_check_liveness``."""
+        self._events.put(("retract", list(node_ids)))
 
     def retire_node(self, node_id: str) -> None:
         """Gracefully retire one pool node (the service's ``shrink()``
@@ -713,6 +729,12 @@ class HostLoader:
                 for node_id in event[1]:
                     if node_id not in self.membership.nodes:
                         self.membership.expect(node_id)
+            elif kind == "retract":
+                # A grow() launch failed after its announcement: clear
+                # the phantom record (the loop-end _check_liveness then
+                # fails fast any job it was the last hope of).
+                for node_id in event[1]:
+                    self.membership.retract(node_id)
             elif kind == "retire":
                 self._retire(event[1])
             self._check_liveness()
@@ -885,74 +907,106 @@ class HostLoader:
             if credits:
                 self._answer(node_id, credits)
             return
-        rec = self.membership.nodes.get(node_id)
         for a in acks:
             s = int(a.get("s", 0))
             rid = a.get("id")
             target = a.get("to")
             if not 0 <= s < job.S - 1:
                 continue  # malformed: the last stage has no peer hop
-            entry = job.inflight[s].pop(rid, None)
-            # Chained peer hop: the stage-s input was itself delivered by
-            # a peer, so the live ledger entry sits in peer_inflight[s].
-            pentry = (job.peer_inflight[s].pop(rid, None)
-                      if entry is None else None)
-            t0 = job.dispatch_ts.pop((s, rid), None)
-            if t0 is not None:
-                self.telemetry.observe(
-                    "item_latency_ms", (time.monotonic() - t0) * 1e3)
-            if rid in job.done_ids[s]:
-                self.stats.duplicates_dropped += 1
-                job.duplicates_dropped += 1
-                continue
-            if entry is None and pentry is None:
-                # A stale ack: the host already requeued this item (its
-                # first peer target died) — the requeued copy is
-                # authoritative, and marking this one done would lose it.
-                continue
-            if entry is not None:
-                _, input_obj = entry
-                in_s = s  # the host dispatched stage s's input itself
-            else:
-                _, input_obj, in_s = pentry
-            trec = self.membership.nodes.get(target) if target else None
-            if rid not in job.done_ids[s + 1] and (
-                    trec is None or not trec.alive):
-                # Ack-after-death race: the copy was shipped into a node
-                # the host has already reaped (so _requeue_node_items
-                # never saw this ledger entry) and nothing downstream
-                # delivered it — it is lost.  Recompute from the last
-                # stage the host holds an input for, exactly as the
-                # stranded-ledger path does; the done marks of the
-                # replayed hops must lift or dedup would eat the redo.
-                for t in range(in_s, s):
-                    job.done_ids[t].discard(rid)
-                job.pending[in_s].append((rid, input_obj))
-                self.stats.redispatched += 1
-                self.stats.peer_redispatched += 1
-                continue
-            job.done_ids[s].add(rid)
-            # Result-before-ack race: the target may have computed and
-            # delivered the forwarded item before this ack arrived (two
-            # independent TCP streams).  Ledger it only if stage s+1 has
-            # not already completed it, or it would sit in peer_inflight
-            # forever and stall termination.
-            if rid not in job.done_ids[s + 1]:
-                job.peer_inflight[s + 1][rid] = (target, input_obj, in_s)
-            self.stats.forwarded += 1
-            self.stats.peer_forwarded += 1
-            job.forwarded += 1
-            job.peer_forwarded += 1
-            job.items_by_node[node_id] = \
-                job.items_by_node.get(node_id, 0) + 1
-            if rec is not None:
-                rec.items_done += 1
-            self.timing.count_item(node_id)
+            self._apply_peer_ack(job, node_id, s, rid, target)
         self._publish_job(job)
         if credits:
             self._answer(node_id, credits)
         self._flush_waiting()
         self._maybe_finish(job)
+
+    def _apply_peer_ack(self, job: JobState, node_id: str, s: int,
+                        rid: int, target: str) -> None:
+        """Advance the exactly-once ledger for one acked hop s -> s+1.
+
+        Called for each ack on arrival, and again for a *parked* ack the
+        moment its predecessor hop creates the ledger entry it advances
+        (consecutive hops are acked by different nodes over independent
+        sockets, so chained acks can arrive out of order — processing
+        hop s+1's ack before hop s's would otherwise drop it as stale
+        and leak the ledger entry, stalling termination forever)."""
+        entry = job.inflight[s].pop(rid, None)
+        # Chained peer hop: the stage-s input was itself delivered by
+        # a peer, so the live ledger entry sits in peer_inflight[s].
+        pentry = (job.peer_inflight[s].pop(rid, None)
+                  if entry is None else None)
+        t0 = job.dispatch_ts.pop((s, rid), None)
+        if t0 is not None:
+            self.telemetry.observe(
+                "item_latency_ms", (time.monotonic() - t0) * 1e3)
+        if rid in job.done_ids[s]:
+            self.stats.duplicates_dropped += 1
+            job.duplicates_dropped += 1
+            return
+        if entry is None and pentry is None:
+            if s > 0 and (s - 1) in job.peer_hops:
+                # Chained-hop ack race: this hop's ack beat the previous
+                # hop's, so the entry it must advance does not exist yet.
+                # Park it for the predecessor's arrival.
+                job.parked_acks[(s, rid)] = (node_id, target)
+                return
+            # A stale ack: the host already requeued this item (its
+            # first peer target died) — the requeued copy is
+            # authoritative, and marking this one done would lose it.
+            return
+        if entry is not None:
+            _, input_obj = entry
+            in_s = s  # the host dispatched stage s's input itself
+        else:
+            _, input_obj, in_s = pentry
+        trec = self.membership.nodes.get(target) if target else None
+        if rid not in job.done_ids[s + 1] and (
+                trec is None or not trec.alive):
+            # Ack-after-death race: the copy was shipped into a node
+            # the host has already reaped (so _requeue_node_items
+            # never saw this ledger entry) and nothing downstream
+            # delivered it — it is lost.  Recompute from the last
+            # stage the host holds an input for, exactly as the
+            # stranded-ledger path does; the done marks of the
+            # replayed hops must lift or dedup would eat the redo.
+            for t in range(in_s, s):
+                job.done_ids[t].discard(rid)
+            self._drop_parked_acks(job, rid)
+            job.pending[in_s].append((rid, input_obj))
+            self.stats.redispatched += 1
+            self.stats.peer_redispatched += 1
+            return
+        job.done_ids[s].add(rid)
+        # Result-before-ack race: the target may have computed and
+        # delivered the forwarded item before this ack arrived (two
+        # independent TCP streams).  Ledger it only if stage s+1 has
+        # not already completed it, or it would sit in peer_inflight
+        # forever and stall termination.
+        if rid not in job.done_ids[s + 1]:
+            job.peer_inflight[s + 1][rid] = (target, input_obj, in_s)
+        self.stats.forwarded += 1
+        self.stats.peer_forwarded += 1
+        job.forwarded += 1
+        job.peer_forwarded += 1
+        job.items_by_node[node_id] = \
+            job.items_by_node.get(node_id, 0) + 1
+        rec = self.membership.nodes.get(node_id)
+        if rec is not None:
+            rec.items_done += 1
+        self.timing.count_item(node_id)
+        # A parked successor ack was waiting for exactly the ledger
+        # entry created above: apply it now, same as if it had just
+        # arrived (cascades down chains of any length).
+        parked = job.parked_acks.pop((s + 1, rid), None)
+        if parked is not None and rid in job.peer_inflight[s + 1]:
+            p_node, p_target = parked
+            self._apply_peer_ack(job, p_node, s + 1, rid, p_target)
+
+    def _drop_parked_acks(self, job: JobState, rid: int) -> None:
+        """An item is being requeued for recompute: acks parked by its
+        now-abandoned downstream copies must never apply to the replay."""
+        for key in [k for k in job.parked_acks if k[1] == rid]:
+            del job.parked_acks[key]
 
     def _peer_dir(self) -> dict[str, tuple[str, int]]:
         """node_id -> (ip, peer data-plane port) for every routable member
@@ -1113,6 +1167,7 @@ class HostLoader:
                         if nid == node_id]
                 for iid in lost:
                     _, obj = job.inflight[s].pop(iid)
+                    self._drop_parked_acks(job, iid)
                     job.pending[s].append((iid, obj))
                     self.stats.redispatched += 1
                     requeued = True
@@ -1123,6 +1178,7 @@ class HostLoader:
                     _, obj, in_s = job.peer_inflight[s].pop(rid)
                     for t in range(in_s, s):
                         job.done_ids[t].discard(rid)
+                    self._drop_parked_acks(job, rid)
                     job.pending[in_s].append((rid, obj))
                     self.stats.redispatched += 1
                     self.stats.peer_redispatched += 1
@@ -1319,7 +1375,11 @@ class HostLoader:
         """A job with obligations left but no eligible live nodes can never
         finish — fail it fast instead of idling to its deadline.  LAUNCHING
         members keep a stage eligible: a degraded start's straggler (or a
-        respawned launch) may still register and carry the stage."""
+        respawned launch) may still register and carry the stage — but only
+        within ``register_timeout`` of its announcement; a launch silent
+        longer than the boot barrier would wait is a phantom (the process
+        died pre-REGISTER) and must not hold jobs open forever."""
+        now = time.monotonic()
         for job in [j for j in self._jobs.values() if j.active]:
             failed = False
             for s in range(job.S):
@@ -1330,7 +1390,10 @@ class HostLoader:
                                if self._stage_of(rec.node_id) == s]
                 else:
                     members = list(self.membership.nodes.values())
-                if any(rec.alive or rec.state == LAUNCHING
+                if any(rec.alive
+                       or (rec.state == LAUNCHING
+                           and now - rec.state_changed_at
+                               < self.register_timeout)
                        for rec in members):
                     continue
                 self._fail_job(job, RuntimeError(
@@ -1753,9 +1816,21 @@ class HostLoader:
 
     # -- teardown -----------------------------------------------------------
 
+    def _member_snapshot(self) -> list[NodeRecord]:
+        """Cross-thread membership snapshot for teardown paths: the
+        dispatcher may still be inserting records (a queued ``expect``)
+        while the closing thread walks them, and dict iteration during a
+        resize raises RuntimeError."""
+        for _ in range(8):
+            try:
+                return list(self.membership.nodes.values())
+            except RuntimeError:
+                continue
+        return []
+
     def shutdown_nodes(self) -> None:
         """Send UT to every live node (pool teardown — they exit cleanly)."""
-        for rec in self.membership.nodes.values():
+        for rec in self._member_snapshot():
             if rec.alive and rec.conn is not None:
                 try:
                     rec.conn.send(Frame(FrameType.UT, None, APP_WIRE_CHANNEL))
@@ -1768,7 +1843,7 @@ class HostLoader:
             self._listener.close()
         except OSError:
             pass
-        for rec in self.membership.nodes.values():
+        for rec in self._member_snapshot():
             if rec.conn is not None:
                 rec.conn.close()
         self.telemetry.close()  # flush the trace; the bus itself stays readable

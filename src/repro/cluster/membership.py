@@ -133,6 +133,20 @@ class Membership:
         self.nodes[node_id] = rec
         return rec
 
+    def retract(self, node_id: str, now: float | None = None) -> bool:
+        """Withdraw a launch announcement whose launch never produced a
+        process (``launcher.launch`` raised): the record leaves LAUNCHING
+        — straight to DEAD, with no FailureEvent since there was never a
+        node to lose — so it stops counting as capacity on its way and
+        stops keeping stages eligible.  Refused (False) once the node
+        registered or otherwise left LAUNCHING."""
+        rec = self.nodes.get(node_id)
+        if rec is None or rec.state != LAUNCHING:
+            return False
+        self._transition(rec, DEAD, now)
+        rec.credits = 0
+        return True
+
     def register(self, node_id: str, address: str, *, cores: int = 1,
                  pid: int = 0, conn: Any = None, peer_port: int = 0,
                  now: float | None = None) -> NodeRecord:

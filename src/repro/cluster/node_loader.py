@@ -450,11 +450,14 @@ def run_node(
     def flusher() -> None:
         while not stop_flush.is_set():
             interval = flush_interval
-            if flush_overrides:
-                # GIL-atomic read; a job binding/closing mid-min just
-                # shifts the next wake by one beat.
-                interval = min(interval,
-                               min(flush_overrides.values(), default=interval))
+            # Snapshot under out_lock: bind_stages/JOB_CLOSE resize the
+            # dict on the frame thread, and iterating a dict mid-resize
+            # raises RuntimeError — an uncaught one would kill the
+            # flusher and stall every job on this node to its deadline.
+            with out_lock:
+                overrides = list(flush_overrides.values())
+            if overrides:
+                interval = min(interval, min(overrides))
             flush_now.wait(interval)
             flush_now.clear()
             flush()
@@ -515,10 +518,11 @@ def run_node(
         for entry in plan.get("stages", ()):
             ms = entry.get("flush_ms")
             if ms is not None:
-                prior = flush_overrides.get(job_id)
                 iv = max(0.0005, float(ms) / 1000.0)
-                flush_overrides[job_id] = (iv if prior is None
-                                           else min(prior, iv))
+                with out_lock:  # the flusher snapshots under the same lock
+                    prior = flush_overrides.get(job_id)
+                    flush_overrides[job_id] = (iv if prior is None
+                                               else min(prior, iv))
             digest = entry["digest"]
             blob = entry["function"]
             if blob is not None:
@@ -692,7 +696,8 @@ def run_node(
                 jid = frame.job_id
                 for key in [k for k in fns if k[0] == jid]:
                     del fns[key]
-                flush_overrides.pop(jid, None)
+                with out_lock:  # the flusher snapshots under the same lock
+                    flush_overrides.pop(jid, None)
                 route_tables.pop(jid, None)
                 with hold_lock:
                     dropped = peer_hold.pop(jid, None)

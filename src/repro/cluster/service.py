@@ -383,11 +383,11 @@ class ClusterService:
         old = self.handles.get(old_node_id)
         avoid = (old.where,) if old is not None else ()
         try:
-            self.handles[new_node_id] = self.launcher.launch(
-                new_node_id, avoid=avoid
-            )
+            handle = self.launcher.launch(new_node_id, avoid=avoid)
         except Exception:
             return False
+        with self._lock:  # close()/orphaned() snapshot under it
+            self.handles[new_node_id] = handle
         if old is not None:
             try:
                 old.kill()  # best effort; it never joined the network
@@ -508,8 +508,10 @@ class ClusterService:
         (so its REGISTER takes the expected-arrival path even with
         elastic late join disabled), then launched; on registration it
         receives the pool config, every active job's LOAD, and the peer
-        directory broadcast.  Returns the new node ids without waiting
-        for them to boot."""
+        directory broadcast.  Returns the launched node ids without
+        waiting for them to boot; an announcement whose launch fails is
+        retracted (never left as phantom LAUNCHING capacity), and if
+        nothing launched at all the failure is re-raised."""
         if n < 1:
             raise ValueError(f"n must be >= 1, got {n}")
         self.start()
@@ -521,12 +523,34 @@ class ClusterService:
                 new_ids.append(f"node{self._node_seq}")
                 self._node_seq += 1
         self.host_loader.expect_nodes(new_ids)
+        launched: list[str] = []
+        failed: list[str] = []
+        error: Exception | None = None
         for node_id in new_ids:
-            self.handles[node_id] = self.launcher.launch(node_id)
-        self.telemetry.inc("scale_up_events", n)
-        self.telemetry.emit("scale_up", nodes=new_ids, reason=reason,
-                            pool=len(self.handles))
-        return new_ids
+            try:
+                handle = self.launcher.launch(node_id)
+            except Exception as exc:
+                failed.append(node_id)
+                error = exc
+                continue
+            with self._lock:  # close()/orphaned() snapshot under it
+                self.handles[node_id] = handle
+            launched.append(node_id)
+        if failed:
+            # Withdraw the announcements: a LAUNCHING record with no
+            # process behind it would count as capacity on its way
+            # forever — suppressing autoscale scale-ups (pool_span) and
+            # keeping stages eligible (_check_liveness).
+            self.host_loader.retract_nodes(failed)
+            self.telemetry.emit("scale_up_failed", nodes=failed,
+                                reason=reason, error=str(error))
+        if launched:
+            self.telemetry.inc("scale_up_events", len(launched))
+            self.telemetry.emit("scale_up", nodes=launched, reason=reason,
+                                pool=len(self.handles))
+        elif error is not None:
+            raise error
+        return launched
 
     def shrink(self, node_id: str | None = None, *,
                reason: str = "manual") -> str | None:
@@ -567,15 +591,22 @@ class ClusterService:
 
     def pool_span(self) -> tuple[int, int]:
         """(alive, launching) member counts — the autoscaler's view of
-        capacity present and capacity already on its way."""
+        capacity present and capacity already on its way.  A LAUNCHING
+        record older than the register timeout is not counted: a launch
+        whose process died before REGISTER would otherwise read as
+        capacity forever and suppress every future scale-up."""
         hl = self.host_loader
         if hl is None:
             return (0, 0)
+        now = time.monotonic()
         for _ in range(8):
             try:
                 recs = list(hl.membership.nodes.values())
                 alive = sum(1 for r in recs if r.alive and not r.retiring)
-                launching = sum(1 for r in recs if r.state == LAUNCHING)
+                launching = sum(
+                    1 for r in recs
+                    if r.state == LAUNCHING
+                    and now - r.state_changed_at < hl.register_timeout)
                 return (alive, launching)
             except RuntimeError:
                 continue
@@ -630,12 +661,16 @@ class ClusterService:
         if self.host_loader is not None:
             self.host_loader.close()
         deadline = time.monotonic() + self.shutdown_grace
-        for handle in self.handles.values():
+        with self._lock:
+            # Snapshot: grow()/_relaunch() mutate handles from the
+            # autoscaler and dispatcher threads.
+            handles = list(self.handles.values())
+        for handle in handles:
             remaining = max(0.0, deadline - time.monotonic())
             if handle.wait(timeout=remaining) is None:
                 handle.kill()
                 handle.wait(timeout=self.shutdown_grace)
-        for handle in self.handles.values():
+        for handle in handles:
             join = getattr(handle, "join_drainers", None)
             if join is not None:  # EOF arrives once the child exits
                 join()
@@ -647,7 +682,9 @@ class ClusterService:
 
     def orphaned(self) -> list[str]:
         """Node-loaders still running after close (must be empty)."""
-        return [nid for nid, h in self.handles.items() if h.poll() is None]
+        with self._lock:
+            items = list(self.handles.items())
+        return [nid for nid, h in items if h.poll() is None]
 
     def __enter__(self) -> "ClusterService":
         return self.start()

@@ -255,6 +255,26 @@ def test_enqueue_attach_result_roundtrip(tmp_path):
         assert counts["tickets_done"] == 2
 
 
+def test_bad_ticket_fails_alone_and_pump_survives(tmp_path):
+    """One malformed spec fails only its own ticket: the pump thread
+    survives admission errors (it used to re-raise and die, stranding
+    every tenant's tickets as queued forever), so a good ticket enqueued
+    after the bad one is still admitted and completes."""
+    with _service() as svc:
+        with JobGateway(svc, str(tmp_path / "q.db")) as gw:
+            bad = gw.enqueue(object(), tenant="mallory")  # not a spec
+            good = gw.enqueue(_spec(_double, 10), tenant="alice")
+            hb, hg = gw.attach(bad), gw.attach(good)
+            assert hg.result(timeout=60) == [2 * i for i in range(10)]
+            assert hb.wait(timeout=30)
+            assert hb.status() == "failed"
+            with pytest.raises(RuntimeError, match="AttributeError"):
+                hb.result(timeout=5)
+        counts = svc.telemetry.snapshot()["cluster"]
+        assert counts["tickets_failed"] == 1
+        assert counts["tickets_done"] == 1
+
+
 def test_ticket_survives_gateway_crash_and_restart(tmp_path):
     """The durability pillar: enqueue, crash the gateway before admission,
     restart over the same database, attach, get the result — and the

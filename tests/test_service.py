@@ -286,6 +286,36 @@ def test_grow_then_shrink_round_trip():
     assert svc.orphaned() == []
 
 
+def test_grow_launch_failure_retracts_announcement():
+    """A launch that raises must not leave a phantom LAUNCHING record:
+    the announcement is retracted, pool_span() stops counting it as
+    capacity on its way (a phantom would suppress autoscale scale-ups
+    forever), and no scale_up event is recorded."""
+    with _service(nodes=1) as svc:
+        assert svc.run(_spec(_double, 6)) == [2 * i for i in range(6)]
+
+        def boom(node_id, **kw):
+            raise RuntimeError("launcher out of capacity")
+
+        svc.launcher.launch = boom
+        with pytest.raises(RuntimeError, match="out of capacity"):
+            svc.grow(1)
+        # Wait for the dispatcher to process both the announcement and
+        # its retraction (pool_span alone could read (1, 0) before the
+        # expect event was even applied).
+        deadline = time.monotonic() + 10
+        while True:
+            rec = svc.host_loader.membership.nodes.get("node1")
+            if rec is not None and rec.state == "dead":
+                break
+            assert time.monotonic() < deadline, "retraction never applied"
+            time.sleep(0.02)
+        assert svc.pool_span() == (1, 0)
+        snap = svc.telemetry.snapshot()["cluster"]
+        assert snap.get("scale_up_events", 0) == 0
+    assert svc.orphaned() == []
+
+
 # ---------------------------------------------------------------------------
 # per-stage data-plane knobs on the shared pool
 # ---------------------------------------------------------------------------
